@@ -1,0 +1,44 @@
+"""Paper Fig. 4 + §IV-C2: discovery rate of high-IP molecules under three
+steering policies (random / no-retrain / update-n), on the synthetic
+oracle.  The reproducible claims:
+
+  1. ML-steered >> random (the paper: ~100x more high-IP molecules;
+     success 0.5% random vs 64%/78% steered),
+  2. update-n >= no-retrain (retraining helps),
+  3. the ML models improve with campaign data (MAE trend).
+"""
+from __future__ import annotations
+
+from repro.apps.electrolyte import AppConfig, run_campaign
+
+
+def run(num_molecules: int = 1200, qc_budget: int = 60,
+        initial_train: int = 48, n_retrain: int = 12, seed: int = 0):
+    kw = dict(num_molecules=num_molecules, qc_budget=qc_budget,
+              initial_train=initial_train, n_retrain=n_retrain, seed=seed)
+    rows = []
+    outs = {}
+    for policy in ("random", "no-retrain", "update-n"):
+        out = run_campaign(AppConfig(policy=policy, **kw))
+        outs[policy] = out
+        rows.append((f"fig4_{policy}_n_high", out["n_high"],
+                     f"of {out['n_evaluated']} evaluated"))
+        rows.append((f"fig4_{policy}_success_pct",
+                     100.0 * out["success_rate"],
+                     f"best={out['best']:.2f}V"))
+        rows.append((f"fig4_{policy}_mean_last_quarter",
+                     out["mean_last_quarter"], "late-run mean IP (V)"))
+    rand = max(outs["random"]["success_rate"], 1e-4)
+    rows.append(("fig4_steered_vs_random_x",
+                 outs["update-n"]["success_rate"] / rand,
+                 "paper: ~100x"))
+    rows.append(("fig4_retrain_mae_delta",
+                 outs["update-n"]["initial_mae"]
+                 - outs["update-n"]["final_mae"],
+                 "positive = model improved during campaign"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val},{extra}")

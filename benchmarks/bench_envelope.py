@@ -1,0 +1,30 @@
+"""Paper Fig. 9: Colmena performance envelopes -- average worker
+utilization as a function of task duration D, payload size s (I = O = s)
+and worker count N.  The paper's envelope: 100s/1MB/512-worker tasks reach
+~90%; shorter tasks need smaller payloads or less parallelism."""
+from __future__ import annotations
+
+from repro.apps.synapp import SynConfig, run_synapp
+
+
+def run(T_per_worker: int = 6,
+        durations=(0.005, 0.02, 0.1),
+        sizes=(1 << 10, 1 << 18, 1 << 20),
+        workers=(2, 8)):
+    rows = []
+    for N in workers:
+        for D in durations:
+            for s in sizes:
+                res = run_synapp(SynConfig(
+                    T=T_per_worker * N, D=D, I=s, O=s, N=N,
+                    use_value_server=True))
+                rows.append((
+                    f"fig9_util_N={N}_D={D}_s={s}",
+                    100.0 * res["utilization"],
+                    f"makespan_ms={res['makespan']*1e3:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val:.1f},{extra}")

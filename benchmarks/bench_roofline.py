@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
+emits, per (arch x shape) single-pod cell: the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS / HLO_FLOPs, and per-device memory.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*_{mesh}.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") == "ok":
+            cells.append(rec)
+    return cells
+
+
+def run(mesh: str = "single"):
+    rows = []
+    for rec in load_cells(mesh):
+        r = rec["roofline"]
+        tag = f"{rec['arch']}|{rec['shape']}"
+        rows.append((f"roofline_{tag}_compute_s", r["compute_s"], ""))
+        rows.append((f"roofline_{tag}_memory_s", r["memory_analytic_s"],
+                     f"xla_unfused={r['memory_s']:.4f}"))
+        rows.append((f"roofline_{tag}_collective_s", r["collective_s"], ""))
+        rows.append((f"roofline_{tag}_dominant", 0.0,
+                     r["dominant_analytic"]))
+        rows.append((f"roofline_{tag}_useful_flop_frac",
+                     rec["useful_flop_frac"], "MODEL_FLOPS/HLO_FLOPS"))
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | useful | roofline frac | bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(mesh):
+        r = rec["roofline"]
+        mem = rec.get("memory_analysis") or {}
+        arg = mem.get("argument_size_in_bytes", 0)
+        bound = max(r["compute_s"], r["memory_analytic_s"],
+                    r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_analytic_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant_analytic']} | {rec['useful_flop_frac']:.2f} | "
+            f"{frac:.2f} | {arg/1e9:.2f} GB |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        print(markdown_table())
+    else:
+        for name, val, extra in run():
+            print(f"{name},{val},{extra}")

@@ -1,0 +1,28 @@
+"""Paper Fig. 6: % reduction in SynApp communication overhead with the
+Value Server vs without, as a function of input size I.  The paper finds
+VS helps above ~0.1 MB and hurts below ~10 KB."""
+from __future__ import annotations
+
+from repro.apps.synapp import SynConfig, run_synapp
+
+
+def run(T: int = 100, N: int = 8, sizes=(1 << 10, 1 << 14, 1 << 17,
+                                         1 << 20, 10 << 20)):
+    rows = []
+    for I in sizes:
+        o_no = run_synapp(SynConfig(T=T, D=0.0, I=I, O=0, N=N,
+                                    use_value_server=False))
+        o_vs = run_synapp(SynConfig(T=T, D=0.0, I=I, O=0, N=N,
+                                    use_value_server=True,
+                                    proxy_threshold=1 << 13))
+        no, vs = (o_no["total_overhead_median"],
+                  o_vs["total_overhead_median"])
+        pct = 100.0 * (no - vs) / max(no, 1e-12)
+        rows.append((f"fig6_reduction_pct_I={I}", pct,
+                     f"novs_us={no*1e6:.0f};vs_us={vs*1e6:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val:.1f},{extra}")

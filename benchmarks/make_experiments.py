@@ -1,0 +1,154 @@
+"""Assemble the data-driven sections of EXPERIMENTS.md from the dry-run and
+perf-iteration JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+DRY = os.path.join(HERE, "results", "dryrun")
+PERF = os.path.join(HERE, "results", "perf")
+
+
+def _load(pattern, where=DRY):
+    out = []
+    for f in sorted(glob.glob(os.path.join(where, pattern))):
+        try:
+            out.append((os.path.basename(f), json.load(open(f))))
+        except Exception:
+            pass
+    return out
+
+
+def dryrun_table():
+    print("### Dry-run matrix (compile status, per-device memory)\n")
+    print("| arch | shape | mesh | status | args GB/dev | peak GB/dev | "
+          "compile s |")
+    print("|---|---|---|---|---|---|---|")
+    for name, r in _load("*.json"):
+        mesh = r.get("mesh", "?")
+        st = r.get("status")
+        if st == "ok":
+            mem = r.get("memory_analysis") or {}
+            arg = mem.get("argument_size_in_bytes", 0) / 2**30
+            peak = mem.get("peak_memory_in_bytes", 0) / 2**30
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+                  f"{arg:.2f} | {peak:.2f} | {r['t_compile_s']:.0f} |")
+        elif st == "skip":
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | SKIP | - | - | "
+                  f"- |")
+        else:
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | **FAIL** | - | "
+                  f"- | - |")
+    print()
+
+
+def _next_lever(r) -> str:
+    """One sentence: what would move this cell's dominant term down."""
+    dom = r["roofline"]["dominant_analytic"]
+    arch, shape = r["arch"], r["shape"]
+    moe = "kimi" in arch or "llama4" in arch
+    ssm = arch.startswith(("rwkv", "zamba"))
+    if dom == "collective":
+        if moe:
+            return ("shard_map EP all_to_all dispatch (done in §Perf: "
+                    "4.6x) then overlap FSDP gathers with the layer scan")
+        if shape.startswith("train"):
+            return ("drop TP for this model size: dp_only turns per-layer "
+                    "ARs into one gradient AR (done in §Perf: 7-13x)")
+        return "batch collectives / overlap with compute"
+    if dom == "memory":
+        if shape.startswith(("decode", "long")):
+            if ssm:
+                return ("state already O(1); raise batch to amortize the "
+                        "parameter read per token")
+            return ("int8 KV cache + larger decode batch amortize the "
+                    "cache/param read per token")
+        return "fuse elementwise chains; raise arithmetic intensity"
+    if "useful" in r and r["useful_flop_frac"] < 0.5:
+        return ("recover wasted FLOPs: replicated attention / remat "
+                "recompute (see §Perf remat=policy, dp_only)")
+    return "near compute roofline; gains only from kernel-level fusion"
+
+
+def roofline_table():
+    print("### Roofline (single-pod 16x16 = 256 chips, TPU v5e targets)\n")
+    print("| arch | shape | compute s | memory s (analytic) | memory s "
+          "(XLA unfused) | collective s | dominant | useful "
+          "(6N·D/HLO) | bound s | what moves the dominant term down |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for name, r in _load("*_single.json"):
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.4f} | "
+              f"{ro['memory_analytic_s']:.4f} | {ro['memory_s']:.3f} | "
+              f"{ro['collective_s']:.4f} | {ro['dominant_analytic']} | "
+              f"{r['useful_flop_frac']:.2f} | "
+              f"{ro['step_lower_bound_analytic_s']:.4f} | "
+              f"{_next_lever(r)} |")
+    print()
+
+
+def collective_breakdown(arch, shape):
+    recs = _load(f"{arch}_{shape}_single.json")
+    if not recs:
+        return
+    r = recs[0][1]
+    det = r.get("collective_probe_detail") or {}
+    p1 = det.get("probe1", {})
+    print(f"**{arch} x {shape}** per-layer collectives (1-layer probe): ",
+          end="")
+    parts = []
+    for op, d in p1.items():
+        parts.append(f"{op}: {d['count']}x, {d['wire_bytes']/2**20:.0f} "
+                     f"MiB wire")
+    print("; ".join(parts))
+
+
+def perf_table():
+    print("### Perf iterations (hillclimbed cells)\n")
+    print("| cell | variant | compute s | memory s | collective s | "
+          "dominant | bound s | Δ bound |")
+    print("|---|---|---|---|---|---|---|---|")
+    cells = {}
+    # baselines from the dry-run dir
+    for name, r in _load("*_single.json"):
+        if r.get("status") == "ok":
+            cells[(r["arch"], r["shape"], "baseline")] = r
+    for name, r in _load("*_single_*.json", PERF):
+        if r.get("status") == "ok":
+            tag = name.split("_single_")[1].replace(".json", "")
+            cells[(r["arch"], r["shape"], tag)] = r
+
+    seen_cells = sorted({(a, s) for a, s, _ in cells})
+    for arch, shape in seen_cells:
+        variants = sorted([t for a, s, t in cells if (a, s) == (arch, shape)],
+                          key=lambda t: (t != "baseline", t))
+        if len(variants) < 2:
+            continue
+        base = cells[(arch, shape, "baseline")]["roofline"]
+        base_bound = base["step_lower_bound_analytic_s"]
+        for tag in variants:
+            ro = cells[(arch, shape, tag)]["roofline"]
+            bound = ro["step_lower_bound_analytic_s"]
+            delta = 100.0 * (base_bound - bound) / base_bound
+            print(f"| {arch} x {shape} | {tag} | {ro['compute_s']:.4f} | "
+                  f"{ro['memory_analytic_s']:.4f} | "
+                  f"{ro['collective_s']:.4f} | {ro['dominant_analytic']} | "
+                  f"{bound:.4f} | {delta:+.0f}% |")
+    print()
+
+
+if __name__ == "__main__":
+    dryrun_table()
+    roofline_table()
+    perf_table()
+    for cell in (("kimi-k2-1t-a32b", "train_4k"),
+                 ("internlm2-1.8b", "train_4k"),
+                 ("gemma2-2b", "train_4k")):
+        collective_breakdown(*cell)

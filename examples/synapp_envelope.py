@@ -1,0 +1,36 @@
+"""SynApp (paper §IV-D1): measure Colmena overheads for your own
+{T, D, I, O, N} configuration -- the paper publishes this exact tool for
+assessing whether Colmena fits a use case.
+
+    PYTHONPATH=src python examples/synapp_envelope.py --T 100 --D 0.01 \
+        --I 1048576 --O 0 --N 8 [--no-value-server]
+"""
+import argparse
+
+from repro.apps.synapp import SynConfig, run_synapp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--T", type=int, default=100)
+    ap.add_argument("--D", type=float, default=0.01)
+    ap.add_argument("--I", type=int, default=1 << 20)
+    ap.add_argument("--O", type=int, default=0)
+    ap.add_argument("--N", type=int, default=8)
+    ap.add_argument("--no-value-server", action="store_true")
+    args = ap.parse_args()
+
+    res = run_synapp(SynConfig(T=args.T, D=args.D, I=args.I, O=args.O,
+                               N=args.N,
+                               use_value_server=not args.no_value_server))
+    print(f"completed {res['n_results']} tasks in {res['makespan']:.2f}s")
+    print(f"utilization: {100*res['utilization']:.1f}%")
+    print("median lifecycle components (us):")
+    for k, v in sorted(res["medians"].items()):
+        print(f"  {k:28s} {v*1e6:10.1f}")
+    print(f"total overhead (median): "
+          f"{res['total_overhead_median']*1e6:.1f} us/task")
+
+
+if __name__ == "__main__":
+    main()

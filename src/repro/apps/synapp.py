@@ -1,0 +1,99 @@
+"""SynApp: the paper's synthetic application for overhead measurement
+(§IV-D1).  A Thinker + N workers; T identical tasks with duration D,
+unique (non-cacheable) input of size I bytes and output of size O bytes.
+The Thinker submits one task per worker, then one new task per completed
+result, until T tasks are done -- measuring the full task lifecycle for
+each {T, D, I, O, N} configuration (Figs. 5, 6, 9).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import ColmenaQueues, TaskServer, ValueServer
+from repro.core.thinker import BaseThinker, agent, result_processor
+
+
+@dataclass
+class SynConfig:
+    T: int = 200                 # total tasks
+    D: float = 0.0               # task duration (s)
+    I: int = 1 << 20             # input bytes
+    O: int = 0                   # output bytes
+    N: int = 8                   # workers
+    use_value_server: bool = True
+    proxy_threshold: int = 1 << 14
+    seed: int = 0
+
+
+class SynThinker(BaseThinker):
+    def __init__(self, queues, cfg: SynConfig):
+        super().__init__(queues)
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.results = []
+        self.submitted = 0
+
+    def _payload(self):
+        # unique (non-cacheable) input
+        return self.rng.integers(0, 255, size=self.cfg.I,
+                                 dtype=np.uint8).tobytes()
+
+    def _submit(self):
+        self.queues.send_task(self._payload(), self.cfg.D, self.cfg.O,
+                              method="syntask", topic="syntask")
+        self.submitted += 1
+
+    @agent
+    def planner(self):
+        for _ in range(min(self.cfg.N, self.cfg.T)):
+            self._submit()
+
+    @result_processor(topic="syntask")
+    def consumer(self, result):
+        assert result.success, result.error
+        self.results.append(result)
+        if len(self.results) >= self.cfg.T:
+            self.done.set()
+        elif self.submitted < self.cfg.T:
+            self._submit()
+
+
+def syntask(payload: bytes, duration: float, out_bytes: int) -> bytes:
+    if duration:
+        time.sleep(duration)
+    return b"\0" * out_bytes
+
+
+def run_synapp(cfg: SynConfig):
+    """Returns per-component median lifecycle times + utilization."""
+    vs = ValueServer() if cfg.use_value_server else None
+    queues = ColmenaQueues(
+        ["syntask"], value_server=vs,
+        proxy_threshold=cfg.proxy_threshold if cfg.use_value_server
+        else None)
+    server = TaskServer(queues, workers_per_topic=cfg.N)
+    server.register(syntask, topic="syntask")
+    thinker = SynThinker(queues, cfg)
+    t0 = time.perf_counter()
+    with server:
+        thinker.run(timeout=600)
+    makespan = time.perf_counter() - t0
+
+    comps = {}
+    for r in thinker.results:
+        for k, v in r.timer.intervals.items():
+            comps.setdefault(k, []).append(v)
+    medians = {k: float(np.median(v)) for k, v in comps.items()}
+    busy = sum(r.task_runtime for r in thinker.results)
+    overhead = {k: v for k, v in medians.items() if k != "execute"}
+    return {
+        "config": cfg.__dict__,
+        "medians": medians,
+        "total_overhead_median": float(sum(overhead.values())),
+        "makespan": makespan,
+        "utilization": busy / (cfg.N * makespan) if makespan else 0.0,
+        "n_results": len(thinker.results),
+    }

@@ -1,0 +1,103 @@
+"""Pytree <-> on-disk checkpoint shards.
+
+Arrays are flattened with '/'-joined key paths and written as .npz shards
+(one shard per call; large trees could be split, the format supports it).
+A JSON manifest records tree structure, dtypes and a content checksum so a
+torn write is detected at restore time (fault tolerance: a half-written
+checkpoint is never silently loaded).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+from repro.utils.trees import tree_flatten_with_paths
+
+MANIFEST = "manifest.json"
+SHARD = "arrays.npz"
+
+# dtypes numpy's npz cannot round-trip -> stored as raw byte views
+_EXTENDED = {"bfloat16": ml_dtypes.bfloat16,
+             "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+             "float8_e5m2": ml_dtypes.float8_e5m2}
+
+
+def _to_storable(arr: np.ndarray):
+    name = str(arr.dtype)
+    if name in _EXTENDED:
+        return arr.view(np.uint8).reshape(arr.shape + (arr.dtype.itemsize,))
+    return arr
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str):
+    if dtype_name in _EXTENDED:
+        return arr.reshape(arr.shape[:-1] + (-1,)) \
+                  .view(_EXTENDED[dtype_name]) \
+                  .reshape(arr.shape[:-1])
+    return arr
+
+
+def _checksum(arrays: dict) -> str:
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(arrays[k]).tobytes()[:1 << 16])
+    return h.hexdigest()
+
+
+def save(path: str, tree) -> None:
+    """Atomic checkpoint write (tmp dir + rename)."""
+    flat = tree_flatten_with_paths(tree)
+    dtypes = {k: str(np.asarray(v).dtype) for k, v in flat}
+    arrays = {k: _to_storable(np.asarray(v)) for k, v in flat}
+    manifest = {
+        "keys": [k for k, _ in flat],
+        "dtypes": dtypes,
+        "checksum": _checksum(arrays),
+    }
+    parent = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=parent, prefix=".ckpt_tmp_")
+    try:
+        np.savez(os.path.join(tmp, SHARD), **arrays)
+        with open(os.path.join(tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(path):
+            import shutil
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+    except BaseException:
+        import shutil
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (values replaced by stored
+    arrays, cast to the stored dtype).  Raises on checksum mismatch."""
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, SHARD)) as z:
+        arrays = {k: z[k] for k in manifest["keys"]}
+    if _checksum(arrays) != manifest["checksum"]:
+        raise IOError(f"checkpoint {path} failed checksum (torn write?)")
+    flat_like = tree_flatten_with_paths(like)
+    leaves = []
+    for key, ref in flat_like:
+        arr = _from_storable(arrays[key], manifest["dtypes"][key])
+        leaves.append(jnp.asarray(arr))
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def exists(path: str) -> bool:
+    return (os.path.isdir(path)
+            and os.path.exists(os.path.join(path, MANIFEST))
+            and os.path.exists(os.path.join(path, SHARD)))

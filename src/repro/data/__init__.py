@@ -1,0 +1,1 @@
+from repro.data import loader, molecules, tokens  # noqa: F401

@@ -1,0 +1,20 @@
+"""Jitted wrapper / dispatcher for flash attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import flash_attention  # noqa: F401
+
+# interpret=True is the default inside flash_attention (CPU validation);
+# a TPU deployment calls flash_attention(..., interpret=False).
+
+attention_reference = ref.attention_reference
+
+
+def attention(q, k, v, *, impl: str = "kernel", **kw):
+    if impl == "kernel":
+        return flash_attention(q, k, v, **kw)
+    return ref.attention_reference(q, k, v, **{
+        k_: v_ for k_, v_ in kw.items()
+        if k_ in ("causal", "window", "softcap", "q_offset")})

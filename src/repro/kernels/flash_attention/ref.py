@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel: full-softmax attention
+(materializes the score matrix; small shapes only)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None, q_offset: int = 0):
+    """q (B,Sq,H,hd); k/v (B,Sk,KVH,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    ke = jnp.repeat(k, G, axis=2) if G > 1 else k
+    ve = jnp.repeat(v, G, axis=2) if G > 1 else v
+    s = jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32) * hd ** -0.5,
+                   ke.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhij,bjhd->bihd", p, ve.astype(jnp.float32))
+    return o.astype(q.dtype)

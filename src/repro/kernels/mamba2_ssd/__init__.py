@@ -1,0 +1,1 @@
+from repro.kernels.mamba2_ssd import ops, ref  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.moe_gmm import ops, ref  # noqa: F401

@@ -1,0 +1,65 @@
+"""MoE FFN built on the grouped-matmul kernel.
+
+Routing/dispatch (scatter-gather, identical to models.moe.moe_dropping)
+stays in jnp; the three expert GEMMs run through the Pallas gmm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gmm.moe_gmm import gmm  # noqa: F401
+from repro.kernels.moe_gmm.ref import gmm_reference  # noqa: F401
+
+
+def moe_ffn(params, x, cfg):
+    from repro.models import moe as moe_mod
+    from repro.models.mlp import _act
+
+    B, S, D = x.shape
+    E = cfg.num_experts
+    C = moe_mod._capacity(cfg, S)
+    cd = jnp.dtype(cfg.compute_dtype)
+    gates, topw, topi = moe_mod._router(params, x, cfg)
+    aux = moe_mod.aux_load_balance_loss(gates, topi, E)
+
+    def route_row(x_row, topi_row, topw_row):
+        pos, keep = moe_mod._route_positions(topi_row, cfg, C)
+        e_flat = topi_row.reshape(-1)
+        p_flat = jnp.where(keep, pos, C).reshape(-1)
+        tok_flat = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[:, None],
+            topi_row.shape).reshape(-1)
+        slots = jnp.full((E, C), S, jnp.int32)
+        slots = slots.at[e_flat, p_flat].set(tok_flat, mode="drop")
+        xe = jnp.take(x_row, slots, axis=0, mode="fill",
+                      fill_value=0).astype(cd)
+        return xe, (e_flat, p_flat, keep, topw_row)
+
+    xe, meta = jax.vmap(route_row)(x, topi, topw)      # (B,E,C,D)
+    Bb, _, _, _ = xe.shape
+    xe2 = xe.reshape(B * E, C, D)
+
+    def tile(w):
+        return jnp.broadcast_to(w[None], (B,) + w.shape).reshape(
+            (B * E,) + w.shape[1:]).astype(cd)
+
+    act = _act(cfg.act)
+    g = gmm(xe2, tile(params["wi_gate"]))
+    u = gmm(xe2, tile(params["wi_up"]))
+    ye = gmm((act(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(cd),
+             tile(params["wo"]))
+    ye = ye.reshape(B, E, C, D)
+
+    def combine_row(ye_row, m):
+        e_flat, p_flat, keep, topw_row = m
+        K = topw_row.shape[-1]
+        yk = ye_row.reshape(E * C, D)
+        flat_idx = jnp.where(keep.reshape(-1), e_flat * C + p_flat, E * C)
+        y_sel = jnp.take(yk, flat_idx, axis=0, mode="fill", fill_value=0)
+        w = (topw_row.reshape(-1, 1)
+             * keep.reshape(-1, 1)).astype(y_sel.dtype)
+        return jnp.sum((y_sel * w).reshape(S, K, D), axis=1)
+
+    y = jax.vmap(combine_row)(ye, meta)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,1 @@
+from repro.kernels.mpnn_mp import ops, ref  # noqa: F401

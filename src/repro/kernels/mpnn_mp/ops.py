@@ -1,0 +1,11 @@
+"""Dispatching wrapper for the MPNN message step."""
+from __future__ import annotations
+
+from repro.kernels.mpnn_mp.mpnn_mp import message_pass_pallas
+from repro.kernels.mpnn_mp.ref import message_pass_reference  # noqa: F401
+
+
+def message_pass(h, edge_mat, adj, *, impl: str = "kernel"):
+    if impl == "kernel":
+        return message_pass_pallas(h, edge_mat, adj)
+    return message_pass_reference(h, edge_mat, adj)

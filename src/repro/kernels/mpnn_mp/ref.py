@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the MPNN message step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def message_pass_reference(h, edge_mat, adj):
+    """h (B,N,Hd); edge_mat (B,N,N,Hd,Hd); adj (B,N,N) -> (B,N,Hd)."""
+    return jnp.einsum("bijkl,bjl,bij->bik",
+                      edge_mat.astype(jnp.float32),
+                      h.astype(jnp.float32),
+                      adj.astype(jnp.float32)).astype(h.dtype)

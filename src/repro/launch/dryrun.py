@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first initialization.  Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod),
+  2. assembles the jitted program with full in/out shardings
+     (repro.launch.steps.build_program),
+  3. ``.lower().compile()`` -- any sharding mismatch, OOM-at-compile or
+     unsupported collective fails the cell,
+  4. records memory_analysis / cost_analysis / parsed collective traffic /
+     roofline terms to JSON for EXPERIMENTS.md and the roofline bench.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out benchmarks/results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ShardingConfig, TrainConfig,
+                                active_param_count, get_config, param_count,
+                                shape_applicable)
+from repro.launch import analytic, hlo_analysis, steps
+from repro.launch.mesh import make_production_mesh, mesh_chips
+
+
+def probe_configs(cfg):
+    """Two shallow, fully-unrolled configs for cost extrapolation.
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count, so a scanned layer stack under-reports FLOPs/bytes/collectives.
+    Every cost component is linear in the scan step count (loop bodies are
+    identical; stacked-parameter collectives scale linearly in size), so two
+    unrolled probes give an exact extrapolation:
+        cost(full) = cost(p1) + (steps_full - 1) * (cost(p2) - cost(p1)).
+    """
+    if cfg.is_encdec:
+        assert cfg.encoder_layers == cfg.num_layers
+        c1 = cfg.replace(num_layers=1, encoder_layers=1, scan_unroll=True)
+        c2 = cfg.replace(num_layers=2, encoder_layers=2, scan_unroll=True)
+        return c1, c2, cfg.num_layers
+    if cfg.family == "hybrid":
+        ae = max(cfg.attn_every, 1)
+        groups, tail = divmod(cfg.num_layers, ae)
+        c1 = cfg.replace(num_layers=ae + tail, scan_unroll=True)
+        c2 = cfg.replace(num_layers=2 * ae + tail, scan_unroll=True)
+        return c1, c2, groups
+    per = cfg.local_global_period or 1
+    c1 = cfg.replace(num_layers=per, scan_unroll=True)
+    c2 = cfg.replace(num_layers=2 * per, scan_unroll=True)
+    return c1, c2, cfg.num_layers // per
+
+
+def _compile_cell(cfg, shape, mesh, sc):
+    jfn, args = steps.build_program(cfg, shape, mesh, tc=TrainConfig(),
+                                    sc=sc)
+    t0 = time.time()
+    lowered = jfn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _cost_of(compiled, chips):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = hlo_analysis.collective_stats(compiled.as_text(), chips)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             sc: ShardingConfig = None, save_hlo: bool = False,
+             out_dir: str = None, probes: bool = True, cfg_overrides=None):
+    """Lower+compile one cell; returns the result record (raises on failure).
+
+    cfg_overrides: dict of ModelConfig fields for perf iterations
+    (e.g. {"seq_parallel": True, "remat": "policy"})."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    sc = sc or default_sharding(cfg, shape_name)
+    with mesh:
+        compiled, t_lower, t_compile = _compile_cell(cfg, shape, mesh, sc)
+        mem = compiled.memory_analysis()
+        f_scan, b_scan, coll_scan = _cost_of(compiled, chips)
+        hlo = compiled.as_text()
+
+        if probes:
+            c1, c2, steps_full = probe_configs(cfg)
+            comp1, _, t_p1 = _compile_cell(c1, shape, mesh, sc)
+            f1, b1, w1 = _cost_of(comp1, chips)
+            comp2, _, t_p2 = _compile_cell(c2, shape, mesh, sc)
+            f2, b2, w2 = _cost_of(comp2, chips)
+            lin = lambda a, b: a + (steps_full - 1) * max(b - a, 0.0)
+            flops_dev = lin(f1, f2)
+            bytes_dev = lin(b1, b2)
+            wire_dev = lin(w1.total_wire_bytes, w2.total_wire_bytes)
+            coll_detail = {
+                "probe1": w1.as_dict(), "probe2": w2.as_dict(),
+                "steps_full": steps_full,
+            }
+        else:
+            flops_dev, bytes_dev = f_scan, b_scan
+            wire_dev = coll_scan.total_wire_bytes
+            coll_detail = None
+
+    coll = coll_scan
+    mem_model = analytic.analytic_hbm_bytes(cfg, shape, mesh, sc)
+    roof = hlo_analysis.roofline_terms(
+        flops=flops_dev * chips, hbm_bytes=bytes_dev * chips,
+        wire_bytes=wire_dev, chips=chips)
+    # analytic memory term (fused-TPU traffic model; see launch/analytic.py)
+    mem_term = mem_model["total"] / hlo_analysis.HBM_BW
+    roof["memory_analytic_s"] = mem_term
+    terms = {"compute": roof["compute_s"], "memory": mem_term,
+             "collective": roof["collective_s"]}
+    roof["dominant_analytic"] = max(terms, key=terms.get)
+    roof["step_lower_bound_analytic_s"] = max(terms.values())
+
+    n_total = param_count(cfg)
+    n_active = active_param_count(cfg)
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind in ("train", "prefill")
+              else shape.global_batch)          # decode: 1 new token/seq
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops = mult * n_active * tokens
+    useful = model_flops / max(flops_dev * chips, 1.0)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "chips": chips,
+        "mesh_shape": {k: int(v) for k, v in mesh.shape.items()},
+        "sharding": {"mode": sc.mode, "zero": sc.zero,
+                     "microbatches": sc.microbatches,
+                     "remat": sc.remat_override or cfg.remat},
+        "cfg_overrides": cfg_overrides or {},
+        "params_total": n_total, "params_active": n_active,
+        "tokens_per_step": tokens,
+        "model_flops": model_flops,
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "hlo_flops_per_dev_scan_raw": f_scan,
+        "useful_flop_frac": useful,
+        "collectives": coll.as_dict(),
+        "collective_wire_bytes_per_dev": wire_dev,
+        "collective_probe_detail": coll_detail,
+        "analytic_hbm_bytes_per_dev": mem_model,
+        "roofline": roof,
+        "memory_analysis": _mem_dict(mem),
+        "t_lower_s": t_lower, "t_compile_s": t_compile,
+    }
+    if save_hlo and out_dir:
+        fn = os.path.join(out_dir, f"{arch}_{shape_name}_"
+                          f"{'multi' if multi_pod else 'single'}.hlo.txt")
+        with open(fn, "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def default_sharding(cfg, shape_name: str) -> ShardingConfig:
+    """Per-cell default distribution config (the paper-faithful baseline
+    uses plain DP+TP; big-model cells need FSDP to be honest about fit)."""
+    if cfg.name.startswith("kimi") or cfg.name.startswith("qwen2-vl"):
+        return ShardingConfig(mode="fsdp_tp", zero=1)
+    return ShardingConfig(mode="dp_tp", zero=1)
+
+
+def _mem_dict(mem):
+    if mem is None:
+        return None
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        if hasattr(mem, attr):
+            try:
+                out[attr] = int(getattr(mem, attr))
+            except Exception:
+                pass
+    return out or str(mem)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override key=value (perf iterations)")
+    ap.add_argument("--mode", default=None,
+                    help="ShardingConfig mode override (dp_tp|fsdp_tp|dp_only)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for output json files")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        key, val = kv.split("=", 1)
+        if val.lower() in ("true", "false"):
+            val = val.lower() == "true"
+        elif val.lstrip("-").isdigit():
+            val = int(val)
+        overrides[key] = val
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape_name}_{'multi' if multi else 'single'}"
+                if args.tag:
+                    tag += "_" + args.tag
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[cached] {tag}")
+                    continue
+                try:
+                    sc = None
+                    if args.mode:
+                        import dataclasses
+                        sc = dataclasses.replace(
+                            default_sharding(get_config(arch), shape_name),
+                            mode=args.mode)
+                    # probes (cost extrapolation) only on the single-pod
+                    # mesh; the roofline table is single-pod by assignment
+                    rec = run_cell(arch, shape_name, multi, sc=sc,
+                                   save_hlo=args.save_hlo, out_dir=args.out,
+                                   probes=not multi,
+                                   cfg_overrides=overrides or None)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi else "single",
+                           "status": "fail", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skip"
+                n_fail += st == "fail"
+                if st == "ok":
+                    r = rec["roofline"]
+                    print(f"[ok]   {tag}: dom={r['dominant_analytic']} "
+                          f"comp={r['compute_s']:.4f}s "
+                          f"mem={r['memory_analytic_s']:.4f}s "
+                          f"(xla {r['memory_s']:.3f}s) "
+                          f"coll={r['collective_s']:.4f}s "
+                          f"useful={rec['useful_flop_frac']:.2f} "
+                          f"(compile {rec['t_compile_s']:.0f}s)")
+                elif st == "skip":
+                    print(f"[skip] {tag}: {rec['reason']}")
+                else:
+                    print(f"[FAIL] {tag}: {rec['error']}")
+    print(f"\ndry-run summary: ok={n_ok} skip={n_skip} fail={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,130 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but not collective
+traffic, so we parse the optimized HLO text and sum the tensor sizes moved
+by every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (including their async -start forms).
+
+Roofline model (TPU v5e targets):
+    compute    = HLO_FLOPs  / (chips * 197e12 FLOP/s bf16)
+    memory     = HLO_bytes  / (chips * 819e9  B/s HBM)
+    collective = wire_bytes / (chips * 50e9   B/s per ICI link)
+
+wire_bytes uses standard ring-algorithm factors: all-reduce moves
+2*(n-1)/n of the tensor per device, the others (n-1)/n.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link direction
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "e4m3": 1, "e5m2": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.12 = bf16[16,1024,512]{2,1,0} all-gather(...)
+#       ROOT %r = (f32[2]{0}, f32[4,4]{1,0}) all-reduce-start(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<out>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        members = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(members))
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))    # [num_groups, group_size]
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    # op -> [count, tensor_bytes (per-device payload), wire_bytes]
+    per_op: dict = field(default_factory=dict)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(v[2] for v in self.per_op.values())
+
+    @property
+    def total_tensor_bytes(self) -> float:
+        return sum(v[1] for v in self.per_op.values())
+
+    def as_dict(self):
+        return {k: {"count": v[0], "tensor_bytes": v[1], "wire_bytes": v[2]}
+                for k, v in self.per_op.items()}
+
+
+def collective_stats(hlo_text: str, total_devices: int) -> CollectiveStats:
+    """Sum collective payloads over the module (per-device program)."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        out_bytes = _shape_bytes(m.group("out"))
+        n = _group_size(line, total_devices)
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / max(n, 1) * out_bytes
+        elif op == "all-gather":
+            wire = (n - 1) / max(n, 1) * out_bytes      # output is gathered
+        elif op == "reduce-scatter":
+            wire = (n - 1) * out_bytes                  # output is the shard
+        elif op == "all-to-all":
+            wire = (n - 1) / max(n, 1) * out_bytes
+        else:  # collective-permute
+            wire = float(out_bytes)
+        rec = stats.per_op.setdefault(op, [0, 0.0, 0.0])
+        rec[0] += 1
+        rec[1] += float(out_bytes)
+        rec[2] += float(wire)
+    return stats
+
+
+def roofline_terms(*, flops: float, hbm_bytes: float, wire_bytes: float,
+                   chips: int) -> dict:
+    """Three roofline terms in seconds + the dominant bottleneck.
+
+    flops / hbm_bytes are whole-program totals (cost_analysis of the
+    per-device module scaled by chips); wire_bytes is per-device."""
+    compute = flops / (chips * PEAK_FLOPS)
+    memory = hbm_bytes / (chips * HBM_BW)
+    collective = wire_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms["dominant"] = dominant.replace("_s", "")
+    terms["step_lower_bound_s"] = bound
+    return terms

@@ -1,0 +1,313 @@
+"""Program builders: train_step / prefill / decode_step + their shardings.
+
+This is the single source of truth the dry-run, the trainer, the serving
+engine and the benchmarks all use.  For every (arch x input-shape) cell it
+provides:
+
+- ``input_specs(cfg, shape)``      : ShapeDtypeStruct stand-ins, no allocation
+- ``input_shardings(cfg, shape, mesh)``
+- ``abstract_state(cfg)`` / ``state_shardings(cfg, mesh, sc)``
+- ``make_train_step(cfg, tc, sc)`` : grad accumulation, clip, AdamW, guards
+- ``make_prefill(cfg)`` / ``make_decode_step(cfg)``
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, ShapeConfig, ShardingConfig,
+                                TrainConfig)
+from repro.distributed import axisenv, sharding as shd
+from repro.models import api
+from repro.optim import adamw, clip, schedules
+
+
+def _with_axisenv(fn, mesh, global_batch, mode="dp_tp"):
+    """Wrap a step fn so model-level sharding constraints resolve during
+    tracing (axisenv is consulted at trace time)."""
+    bax = shd.batch_axes(mesh, global_batch, mode)
+    sizes = tuple(int(mesh.shape[a]) for a in bax)
+    # in dp_only mode no tensor axis lives on "model"
+    model = "model" if "model" in mesh.shape and mode != "dp_only" else None
+    msize = int(mesh.shape.get("model", 1))
+
+    def wrapped(*args):
+        with axisenv.activation_axes(batch=bax, batch_sizes=sizes,
+                                     model=model, model_size=msize,
+                                     mesh=mesh):
+            return fn(*args)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Cache logical axes (mirrors api.init_cache structure)
+# ---------------------------------------------------------------------------
+
+_KV_AXES = {"k": ("layer", "batch", "seq", "kv_heads", "head_dim"),
+            "v": ("layer", "batch", "seq", "kv_heads", "head_dim")}
+
+
+def cache_axes(cfg: ModelConfig):
+    if cfg.is_encdec:
+        return {"self": dict(_KV_AXES), "cross": dict(_KV_AXES)}
+    if cfg.rwkv:
+        return {
+            "tm_shift": ("layer", "batch", "seq", "embed"),
+            "cm_shift": ("layer", "batch", "seq", "embed"),
+            "state": ("layer", "batch", "heads", "head_dim", "head_dim2"),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "mamba": {
+                "conv": ("layer", "batch", "conv", "ssm_inner"),
+                "ssm": ("layer", "batch", "ssm_heads", "head_dim", "state"),
+            },
+            "attn": dict(_KV_AXES),
+        }
+    return dict(_KV_AXES)
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, B: int, S: int, *, with_labels: bool):
+    """Abstract model-input batch for a full-sequence program."""
+    cd = cfg.compute_dtype
+    out = {}
+    if cfg.family == "vlm":
+        out["embeds"] = _sds((B, S, cfg.d_model), cd)
+        out["positions"] = _sds((3, B, S), "int32")
+    else:
+        out["tokens"] = _sds((B, S), "int32")
+    if cfg.is_encdec:
+        out["frames"] = _sds((B, S, cfg.d_model), cd)
+    if with_labels:
+        out["labels"] = _sds((B, S), "int32")
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for every program input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, B, S, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, B, S, with_labels=False)}
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: api.init_cache(cfg, B, S, enc_len=S))
+        return {
+            "cache": cache,
+            "tokens": _sds((B, 1), "int32"),
+            "cur_len": _sds((), "int32"),
+        }
+    raise ValueError(shape.kind)
+
+
+def _batch_input_shardings(cfg, specs, mesh, global_batch, mode="dp_tp"):
+    bax = shd.batch_axes(mesh, global_batch, mode)
+    lead = bax if bax else None
+
+    def spec_of(name, s):
+        if name == "positions":
+            return P(None, lead, None)
+        return P(lead, *([None] * (len(s.shape) - 1)))
+
+    return {name: NamedSharding(mesh, spec_of(name, s))
+            for name, s in specs.items()}
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    mode: str = "dp_tp"):
+    specs = input_specs(cfg, shape)
+    if shape.kind in ("train", "prefill"):
+        return {"batch": _batch_input_shardings(
+            cfg, specs["batch"], mesh, shape.global_batch, mode)}
+    # decode
+    axes = cache_axes(cfg)
+    cache_sh = jax.tree.map(
+        lambda ax, s: NamedSharding(mesh, shd.cache_spec(
+            ax, s.shape, mesh, shape.global_batch)),
+        axes, specs["cache"],
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+    bax = shd.batch_axes(mesh, shape.global_batch, mode)
+    lead = bax if bax else None
+    return {
+        "cache": cache_sh,
+        "tokens": NamedSharding(mesh, P(lead, None)),
+        "cur_len": NamedSharding(mesh, P()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+
+def abstract_state(cfg: ModelConfig):
+    params = api.abstract_params(cfg)
+    opt = jax.eval_shape(adamw.init, params)
+    return {"params": params, "opt": opt}
+
+
+def init_state(cfg: ModelConfig, key):
+    params = api.init_params(cfg, key)
+    return {"params": params, "opt": adamw.init(params)}
+
+
+def state_shardings(cfg: ModelConfig, mesh,
+                    sc: Optional[ShardingConfig] = None):
+    sc = sc or ShardingConfig()
+    abs_params = api.abstract_params(cfg)
+    pspecs = shd.tree_specs(api.param_specs(cfg), abs_params, mesh, sc.mode)
+
+    def moment_spec(ps, ap):
+        return shd.zero_spec(ps, ap.shape, mesh) if sc.zero >= 1 else ps
+
+    mspecs = jax.tree.map(moment_spec, pspecs, abs_params,
+                          is_leaf=lambda x: isinstance(x, P))
+    to_sh = lambda t: jax.tree.map(
+        lambda p: NamedSharding(mesh, p), t,
+        is_leaf=lambda x: isinstance(x, P))
+    return {
+        "params": to_sh(pspecs),
+        "opt": adamw.AdamWState(step=NamedSharding(mesh, P()),
+                                m=to_sh(mspecs), v=to_sh(mspecs)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Programs
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig,
+                    sc: Optional[ShardingConfig] = None):
+    sc = sc or ShardingConfig()
+
+    def grads_of(params, batch):
+        def lf(p):
+            return api.loss_fn(p, cfg, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            lf, has_aux=True)(params)
+        metrics = {**metrics, "loss": loss}
+        return grads, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if sc.microbatches > 1:
+            k = sc.microbatches
+
+            def resh(t):
+                b = t.shape[0]
+                assert b % k == 0, (b, k)
+                return t.reshape((k, b // k) + t.shape[1:])
+
+            # positions (3,B,S) carries batch on dim 1
+            mb = {}
+            for name, t in batch.items():
+                if name == "positions":
+                    b = t.shape[1]
+                    mb[name] = jnp.moveaxis(
+                        t.reshape((3, k, b // k) + t.shape[2:]), 1, 0)
+                else:
+                    mb[name] = resh(t)
+
+            def acc_body(carry, microbatch):
+                g_acc, m_acc = carry
+                g, m = grads_of(params, microbatch)
+                g_acc = jax.tree.map(lambda a, b: a + b / k, g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b / k, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"ce": 0.0, "aux": 0.0, "tokens": 0.0, "loss": 0.0}
+            m0 = jax.tree.map(jnp.float32, m0)
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, m0), mb)
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        grads, nonfinite = clip.zero_nonfinite(grads)
+        grads, gnorm = clip.clip_by_global_norm(grads, tc.grad_clip)
+        lr = schedules.warmup_cosine(
+            state["opt"].step, lr=tc.lr, warmup_steps=tc.warmup_steps,
+            total_steps=tc.total_steps)
+        new_params, new_opt = adamw.update(grads, state["opt"], params,
+                                           lr, tc)
+        metrics = {**metrics, "grad_norm": gnorm, "lr": lr,
+                   "skipped": nonfinite.astype(jnp.float32)}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params, batch):
+        return api.prefill(params, cfg, batch)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, tokens, cur_len):
+        return api.decode_step(params, cfg, cache, tokens, cur_len)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Jitted + sharded program assembly (used by dryrun / trainer / engine)
+# ---------------------------------------------------------------------------
+
+
+def build_program(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                  tc: Optional[TrainConfig] = None,
+                  sc: Optional[ShardingConfig] = None):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    tc = tc or TrainConfig()
+    sc = sc or ShardingConfig()
+    specs = input_specs(cfg, shape)
+    in_sh = input_shardings(cfg, shape, mesh, sc.mode)
+    st_sh = state_shardings(cfg, mesh, sc)
+
+    if shape.kind == "train":
+        fn = _with_axisenv(make_train_step(cfg, tc, sc), mesh,
+                           shape.global_batch, sc.mode)
+        jfn = jax.jit(fn,
+                      in_shardings=(st_sh, in_sh["batch"]),
+                      out_shardings=(st_sh, None),
+                      donate_argnums=(0,))
+        args = (abstract_state(cfg), specs["batch"])
+        return jfn, args
+
+    if shape.kind == "prefill":
+        fn = _with_axisenv(make_prefill(cfg), mesh, shape.global_batch,
+                           sc.mode)
+        jfn = jax.jit(fn,
+                      in_shardings=(st_sh["params"], in_sh["batch"]),
+                      out_shardings=None)
+        args = (api.abstract_params(cfg), specs["batch"])
+        return jfn, args
+
+    if shape.kind == "decode":
+        fn = _with_axisenv(make_decode_step(cfg), mesh, shape.global_batch,
+                           sc.mode)
+        jfn = jax.jit(fn,
+                      in_shardings=(st_sh["params"], in_sh["cache"],
+                                    in_sh["tokens"], in_sh["cur_len"]),
+                      out_shardings=(None, in_sh["cache"]),
+                      donate_argnums=(1,))
+        args = (api.abstract_params(cfg), specs["cache"], specs["tokens"],
+                specs["cur_len"])
+        return jfn, args
+
+    raise ValueError(shape.kind)

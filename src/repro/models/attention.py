@@ -1,0 +1,278 @@
+"""Attention: GQA projections + chunked flash-style reference math.
+
+The reference implementation (`mha_reference`) is a blockwise online-softmax
+attention in pure jnp: it never materializes the full (Sq, Sk) score matrix,
+skips fully-masked KV chunks at *trace* time (so sliding-window layers cost
+only their window), and supports:
+
+- grouped-query attention (num_kv_heads < num_heads),
+- causal masking with a query position offset (decode),
+- static sliding windows (gemma2 local layers),
+- attention-logit softcapping (gemma2),
+- dynamic valid-length masking (decode against a partially filled cache).
+
+The TPU Pallas kernel (`repro.kernels.flash_attention`) implements the same
+contract; `attend` dispatches on ``cfg.attn_impl``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import axisenv
+from repro.models.layers import apply_rope, rmsnorm_head
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def attention_params(mk, cfg: ModelConfig, stacked=(), cross: bool = False):
+    """Projection weights for one attention module (self or cross)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    lead = tuple("layer" for _ in stacked)
+    p = {
+        "wq": mk.param(stacked + (d, nh, hd), lead + ("embed", "heads", "head_dim"),
+                       fan_in=d),
+        "wk": mk.param(stacked + (d, nkv, hd), lead + ("embed", "kv_heads", "head_dim"),
+                       fan_in=d),
+        "wv": mk.param(stacked + (d, nkv, hd), lead + ("embed", "kv_heads", "head_dim"),
+                       fan_in=d),
+        "wo": mk.param(stacked + (nh, hd, d), lead + ("heads", "head_dim", "embed"),
+                       fan_in=nh * hd),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = mk.param(stacked + (hd,), lead + ("head_dim",), init="ones")
+        p["k_norm"] = mk.param(stacked + (hd,), lead + ("head_dim",), init="ones")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core math: blockwise online-softmax attention
+# ---------------------------------------------------------------------------
+
+
+def _chunk_alive(causal: bool, window: Optional[int],
+                 q0: int, q1: int, k0: int, k1: int) -> bool:
+    """Static reachability of a (q-chunk, kv-chunk) pair. Positions are
+    absolute (q already offset). q/k ranges are [q0, q1), [k0, k1)."""
+    if causal and k0 > q1 - 1:
+        return False            # chunk entirely in the future
+    if window is not None and q0 - (k1 - 1) >= window:
+        return False            # chunk entirely beyond the look-back window
+    return True
+
+
+def mha_reference(
+    q: jax.Array,              # (B, Sq, H, hd)
+    k: jax.Array,              # (B, Sk, KVH, hd)
+    v: jax.Array,              # (B, Sk, KVH, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,       # static look-back window (None = full)
+    softcap: Optional[float] = None,
+    q_offset=0,                         # static int OR scalar array (decode)
+    valid_len=None,                     # scalar array: kv positions < valid are real
+    chunk_q: int = 1024,
+    chunk_k: int = 1024,
+) -> jax.Array:
+    """Blockwise attention; returns (B, Sq, H, hd) in q.dtype.
+
+    GQA is handled by *repeating* K/V to the full head count instead of
+    reshaping Q to (KVH, G, hd): the repeat keeps the head axis intact, so
+    a "model"-sharded head dimension propagates through every einsum with
+    no resharding (the (KVH, G) reshape misaligns GSPMD shard boundaries
+    whenever KVH < the mesh axis).  The repeat is a chunk-local transient.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    assert H % KVH == 0, (H, KVH)
+    G = H // KVH
+    scale = hd ** -0.5
+    dyn_offset = not isinstance(q_offset, int)
+    # For static chunk skipping when the offset is dynamic (decode), the only
+    # safe static bound is "q is somewhere in [0, inf)" -> no skipping unless
+    # windowed; decode Sq is tiny so this costs nothing.
+    static_q0 = 0 if dyn_offset else q_offset
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kpos_all = jnp.arange(Sk)
+
+    def kv_chunk(t, k0, k1):
+        c = t[:, k0:k1]
+        return jnp.repeat(c, G, axis=2) if G > 1 else c   # (B,ck,H,hd)
+
+    # decode fast path: tiny Sq, single pass over the whole cache
+    if Sq <= 8:
+        ke, ve = kv_chunk(kf, 0, Sk), kv_chunk(vf, 0, Sk)
+        s = jnp.einsum("bihd,bjhd->bhij", qf, ke)         # (B,H,Sq,Sk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = jnp.arange(Sq) + q_offset
+        mask = jnp.ones((Sq, Sk), bool)
+        if causal:
+            mask &= kpos_all[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= qpos[:, None] - kpos_all[None, :] < window
+        if valid_len is not None:
+            mask &= kpos_all[None, :] < valid_len
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhij,bjhd->bihd", p, ve)
+        return o.astype(q.dtype)
+
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, Sk)
+    n_q, n_k = -(-Sq // cq), -(-Sk // ck)
+    assert Sq % cq == 0 and Sk % ck == 0, "seq must divide chunk sizes"
+
+    out_chunks = []
+    for iq in range(n_q):
+        q0s = static_q0 + iq * cq                    # static lower bound
+        qc = qf[:, iq * cq:(iq + 1) * cq]            # (B,cq,H,hd)
+        qpos = jnp.arange(iq * cq, (iq + 1) * cq) + q_offset  # (cq,) abs
+        m = jnp.full((B, H, cq), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, H, cq), jnp.float32)
+        acc = jnp.zeros((B, cq, H, hd), jnp.float32)
+        for ik in range(n_k):
+            k0, k1 = ik * ck, (ik + 1) * ck
+            if not dyn_offset and not _chunk_alive(
+                    causal, window, q0s, q0s + cq, k0, k1):
+                continue
+            kc, vc = kv_chunk(kf, k0, k1), kv_chunk(vf, k0, k1)
+            s = jnp.einsum("bihd,bjhd->bhij", qc, kc)    # (B,H,cq,ck)
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            kpos = kpos_all[k0:k1]
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            if valid_len is not None:
+                mask &= kpos[None, :] < valid_len
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = (acc * jnp.transpose(corr, (0, 2, 1))[..., None]
+                   + jnp.einsum("bhij,bjhd->bihd", p, vc))
+            m = m_new
+        l_t = jnp.transpose(l, (0, 2, 1))                 # (B,cq,H)
+        out_chunks.append(acc / jnp.maximum(l_t, 1e-30)[..., None])
+    o = jnp.concatenate(out_chunks, axis=1) if n_q > 1 else out_chunks[0]
+    return o.astype(q.dtype)                              # (B,Sq,H,hd)
+
+
+def attend(q, k, v, *, cfg: ModelConfig, causal=True, window=None,
+           q_offset=0, valid_len=None):
+    """Dispatch between the jnp reference and the Pallas TPU kernel."""
+    if cfg.attn_impl == "kernel":
+        from repro.kernels.flash_attention import ops as fa_ops
+        # The Pallas kernel covers the static-offset self/cross attention
+        # cases; decode (dynamic offset, Sq=1) always uses the reference
+        # (it is a tiny GEMV-like op where a kernel buys nothing).
+        if isinstance(q_offset, int) and valid_len is None and q.shape[1] > 1:
+            return fa_ops.flash_attention(
+                q, k, v, causal=causal, window=window,
+                softcap=cfg.attn_logit_softcap, q_offset=q_offset)
+    return mha_reference(
+        q, k, v, causal=causal, window=window,
+        softcap=cfg.attn_logit_softcap, q_offset=q_offset,
+        valid_len=valid_len, chunk_q=cfg.attn_chunk, chunk_k=cfg.attn_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block step (projections + rope + cache + attention)
+# ---------------------------------------------------------------------------
+
+
+def project_qkv(params, x, cfg: ModelConfig, cos=None, sin=None):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,S,KVH,hd); applies qk-norm + rope."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cd))
+    q = axisenv.constrain(q, "batch", None, "model", None)
+    k = axisenv.constrain(k, "batch", None, "kv", None)
+    v = axisenv.constrain(v, "batch", None, "kv", None)
+    if "q_norm" in params:
+        q = rmsnorm_head(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_head(params["k_norm"], k, cfg.norm_eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def output_proj(params, o, cfg: ModelConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    o = axisenv.constrain(o, "batch", None, "model", None)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(cd))
+    # under sequence parallelism the partial-sum reduction lands directly
+    # as a reduce-scatter onto the token-sharded residual layout
+    return axisenv.constrain(out, "batch",
+                             "seq" if cfg.seq_parallel else None, None)
+
+
+def self_attention(params, x, cfg: ModelConfig, *, cos, sin, causal=True,
+                   window=None, cache=None, cur_len=None):
+    """One self-attention application.
+
+    cache: None (full-sequence) or dict {k, v} of (B, S_max, KVH, hd) arrays.
+    cur_len: scalar array; when cache is given, the new tokens are written at
+    [cur_len, cur_len + Sq) and attention sees positions < cur_len + Sq.
+    Returns (out (B,Sq,D), new_cache).
+    """
+    q, k_new, v_new = project_qkv(params, x, cfg, cos, sin)
+    if cache is None:
+        o = attend(q, k_new, v_new, cfg=cfg, causal=causal, window=window)
+        return output_proj(params, o, cfg), None
+    # decode / incremental path
+    B = x.shape[0]
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, _as_idx(cur_len), 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, _as_idx(cur_len), 0, 0))
+    k = axisenv.constrain(k, "batch", None, "kv", None)
+    v = axisenv.constrain(v, "batch", None, "kv", None)
+    valid = cur_len + x.shape[1]
+    o = attend(q, k, v, cfg=cfg, causal=True, window=window,
+               q_offset=cur_len, valid_len=valid)
+    return output_proj(params, o, cfg), {"k": k, "v": v}
+
+
+def cross_attention(params, x, enc_kv, cfg: ModelConfig):
+    """Decoder cross-attention; enc_kv = {k, v} precomputed from encoder."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cd))
+    o = attend(q, enc_kv["k"], enc_kv["v"], cfg=cfg, causal=False)
+    return output_proj(params, o, cfg)
+
+
+def encode_cross_kv(params, enc_out, cfg: ModelConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(cd))
+    return {"k": k, "v": v}
+
+
+def _as_idx(i):
+    return i if isinstance(i, int) else i.astype(jnp.int32)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, layers: int,
+                  dtype=None):
+    """Stacked-over-layers KV cache pytree."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    shape = (layers, batch, max_len, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

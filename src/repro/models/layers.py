@@ -1,0 +1,187 @@
+"""Shared building blocks: the param-maker pattern, norms, RoPE, embeddings.
+
+Every module defines its parameters exactly once via a ``params(mk, cfg)``
+function.  The *maker* ``mk`` decides what is produced:
+
+- ``InitMaker``  -> initialized jnp arrays (used under ``jax.eval_shape`` for
+  abstract shapes too),
+- ``SpecMaker``  -> logical-axis tuples, later resolved to PartitionSpecs by
+  ``repro.distributed.sharding``.
+
+This guarantees shapes and shardings can never drift apart.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Param makers
+# ---------------------------------------------------------------------------
+
+
+class InitMaker:
+    """Creates initialized parameters; deterministic in call order."""
+
+    def __init__(self, key, param_dtype):
+        self.key = key
+        self.dtype = param_dtype
+
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def param(self, shape, axes, init="normal", scale=None, fan_in=None):
+        del axes
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        if init == "normal":
+            if scale is None:
+                fi = fan_in if fan_in is not None else (shape[-2] if len(shape) >= 2 else shape[-1])
+                scale = 1.0 / np.sqrt(max(fi, 1))
+            return (scale * jax.random.truncated_normal(
+                self._next_key(), -2.0, 2.0, shape, jnp.float32)).astype(self.dtype)
+        raise ValueError(init)
+
+
+class SpecMaker:
+    """Returns the logical-axis annotation for each parameter."""
+
+    def __init__(self):
+        pass
+
+    def param(self, shape, axes, init="normal", scale=None, fan_in=None):
+        del init, scale, fan_in
+        assert len(axes) == len(shape), f"axes {axes} vs shape {shape}"
+        return tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_params(mk, dim, stacked=()):
+    return {"scale": mk.param(stacked + (dim,), tuple("layer" for _ in stacked) + ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_head(scale, x, eps):
+    """Per-head RMS norm (qwen3 qk-norm): scale shape (head_dim,)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim, theta):
+    exponent = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def rope_cos_sin(positions, head_dim, theta, mrope_sections=None):
+    """cos/sin tables.
+
+    positions: (B, S) int32, or (3, B, S) for M-RoPE (temporal, height, width).
+    Returns cos, sin with shape (B, S, head_dim/2), float32.
+    """
+    inv = jnp.asarray(rope_freqs(head_dim, theta))  # (hd/2,)
+    if mrope_sections is None:
+        if positions.ndim == 3:
+            positions = positions[0]
+        ang = positions[..., None].astype(jnp.float32) * inv  # (B,S,hd/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3,B,S) positions"
+        secs = mrope_sections
+        assert sum(secs) == head_dim // 2, (secs, head_dim)
+        parts = []
+        start = 0
+        for i, sec in enumerate(secs):
+            p = positions[i][..., None].astype(jnp.float32)  # (B,S,1)
+            parts.append(p * inv[start:start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # (B,S,hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, head_dim); cos/sin: (B, S, head_dim/2). Split-half convention."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_params(mk, cfg: ModelConfig):
+    p = {"embed": mk.param((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           scale=1.0, fan_in=cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = mk.param((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return p
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.emb_scale:
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def unembed(params, h, cfg: ModelConfig):
+    from repro.distributed import axisenv
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+    logits = axisenv.constrain(logits, "batch", None, "model")
+    if cfg.final_logit_softcap:
+        cap = cfg.final_logit_softcap
+        logits = cap * jnp.tanh(logits.astype(jnp.float32) / cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Token-level CE. logits (B,S,V) any float dtype; labels (B,S) int32.
+
+    Computed in f32 with the logsumexp trick; safe for sharded vocab (GSPMD
+    inserts the reductions).  Returns (mean_loss, token_count).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    total = jnp.sum(nll * mask)
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    return total / count, count

@@ -1,0 +1,1 @@
+from repro.optim import adamw, clip, compress, schedules  # noqa: F401

@@ -1,0 +1,57 @@
+"""AdamW with f32 moments over arbitrary pytrees (no optax dependency).
+
+The moment tensors reuse each parameter's logical sharding; with
+``zero >= 1`` the train-step builder additionally shards them over the
+"data" mesh axis (see repro.distributed.sharding.zero_spec).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    m: dict                  # f32 pytree like params
+    v: dict                  # f32 pytree like params
+
+
+def init(params) -> AdamWState:
+    zeros = lambda t: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=zeros(params), v=zeros(params))
+
+
+def update(grads, state: AdamWState, params, lr, tc: TrainConfig):
+    """Returns (new_params, new_state). lr is a scalar (already scheduled).
+    Weight decay is decoupled and applied to matrix-like params only."""
+    step = state.step + 1
+    b1, b2 = tc.b1, tc.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + tc.eps)
+        if p.ndim >= 2 and tc.weight_decay:
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

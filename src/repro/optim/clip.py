@@ -1,0 +1,25 @@
+"""Global-norm gradient clipping + non-finite guard."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.trees import tree_global_norm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped_grads, pre_clip_norm)."""
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def zero_nonfinite(grads):
+    """Replace non-finite gradient leaves with zeros (skip-step guard);
+    returns (grads, any_nonfinite flag)."""
+    flags = [jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads)]
+    ok = jnp.all(jnp.stack(flags)) if flags else jnp.asarray(True)
+    grads = jax.tree.map(
+        lambda g: jnp.where(ok, g, jnp.zeros_like(g)), grads)
+    return grads, ~ok

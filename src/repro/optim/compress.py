@@ -1,0 +1,105 @@
+"""Gradient compression for the slow cross-pod hop.
+
+On a multi-pod mesh the gradient all-reduce decomposes into a fast
+intra-pod reduce-scatter + a slow inter-pod exchange over DCI links.  We
+compress only the inter-pod hop:
+
+- ``bf16``: cast the shard to bf16 before the cross-pod psum (2x bytes).
+- ``int8_ef``: per-tensor-scaled int8 quantization with error feedback
+  (the residual is carried in the optimizer state and added to the next
+  step's gradient, so the quantization error does not accumulate).
+
+These run inside a shard_map over the "pod" axis (see launch/train.py's
+manual-reduce mode); the quantization math itself is mesh-agnostic and
+unit-tested directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, method: str, errors=None):
+    """Quantize a gradient pytree; returns (payload, new_errors).
+
+    payload leaves are (q, scale) for int8_ef, bf16 arrays for bf16.
+    errors is the error-feedback state (same tree as grads, f32).
+    """
+    if method == "none":
+        return grads, errors
+    if method == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), errors
+    if method == "int8_ef":
+        if errors is None:
+            errors = jax.tree.map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, s = quantize_int8(corrected)
+            new_e = corrected - dequantize_int8(q, s)
+            return (q, s), new_e
+
+        pairs = jax.tree.map(one, grads, errors)
+        payload = jax.tree.map(lambda t: t[0], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        new_errors = jax.tree.map(lambda t: t[1], pairs,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        return payload, new_errors
+    raise ValueError(method)
+
+
+def decompress_tree(payload, method: str, like=None):
+    if method == "none":
+        return payload
+    if method == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.float32), payload)
+    if method == "int8_ef":
+        return jax.tree.map(
+            lambda qs: dequantize_int8(*qs), payload,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    raise ValueError(method)
+
+
+def psum_compressed(grads, axis_name: str, method: str, errors=None):
+    """Cross-axis gradient mean with compression (for use inside shard_map).
+
+    int8_ef sums by all-gathering the int8 shards + dequantized local sum,
+    which halves the bytes on the wire vs a bf16 all-reduce."""
+    n = jax.lax.psum(1, axis_name)
+    if method == "none":
+        return jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads), errors
+    if method == "bf16":
+        summed = jax.tree.map(
+            lambda g: jax.lax.pmean(g.astype(jnp.bfloat16), axis_name)
+            .astype(g.dtype), grads)
+        return summed, errors
+    if method == "int8_ef":
+        payload, new_errors = compress_tree(grads, method, errors)
+
+        def reduce_one(qs):
+            q, s = qs
+            qg = jax.lax.all_gather(q, axis_name)        # (n, ...) int8
+            sg = jax.lax.all_gather(s, axis_name)        # (n,) f32
+            vals = qg.astype(jnp.float32) * sg.reshape(
+                (-1,) + (1,) * q.ndim)
+            return jnp.mean(vals, axis=0)
+
+        summed = jax.tree.map(
+            reduce_one, payload,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+        return summed, new_errors
+    raise ValueError(method)

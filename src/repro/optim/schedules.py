@@ -1,0 +1,18 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, lr, warmup_steps, total_steps, final_frac=0.1):
+    step = step.astype(jnp.float32)
+    warm = lr * step / jnp.maximum(warmup_steps, 1)
+    t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, lr, **_):
+    del step
+    return jnp.asarray(lr, jnp.float32)

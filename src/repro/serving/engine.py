@@ -1,0 +1,64 @@
+"""Batched serving engine: prefill + KV-cache decode.
+
+Requests are grouped into equal-prompt-length micro-batches (bucketed
+continuous batching; per-row ragged prompts would need scatter cache
+writes -- see DESIGN.md simplifications).  The engine jits one prefill and
+one decode program per (batch, prompt_len) bucket and reuses them across
+calls (the warm-executable cache that plays the role of the paper's warm
+Python workers).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_new: int = 32):
+        self.cfg = cfg
+        self.params = params
+        self.max_new = max_new
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(p, cfg, b))
+        self._decode = jax.jit(
+            lambda p, c, t, n: api.decode_step(p, cfg, c, t, n))
+        self.stats = {"prefill_calls": 0, "decode_steps": 0,
+                      "tokens_out": 0, "wall": 0.0}
+
+    def generate(self, tokens: np.ndarray, *, max_new: Optional[int] = None,
+                 frames: Optional[np.ndarray] = None) -> np.ndarray:
+        """tokens (B, S) equal-length prompts -> (B, S + max_new)."""
+        t_start = time.perf_counter()
+        max_new = max_new or self.max_new
+        B, S = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if self.cfg.is_encdec:
+            if frames is None:
+                frames = np.zeros((B, S, self.cfg.d_model), np.float32)
+            batch["frames"] = jnp.asarray(frames)
+        logits, cache = self._prefill(self.params, batch)
+        cache = api.grow_cache(self.cfg, cache, S + max_new)
+        self.stats["prefill_calls"] += 1
+
+        out = [jnp.argmax(logits, axis=-1).astype(jnp.int32)]
+        cur = out[-1][:, None]
+        for step in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache, cur,
+                                         jnp.asarray(S + step, jnp.int32))
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            out.append(cur[:, 0])
+            self.stats["decode_steps"] += 1
+        gen = jnp.stack(out, axis=1)
+        self.stats["tokens_out"] += int(B * max_new)
+        self.stats["wall"] += time.perf_counter() - t_start
+        return np.concatenate([tokens, np.asarray(gen)], axis=1)
+
+    def throughput(self) -> float:
+        return self.stats["tokens_out"] / max(self.stats["wall"], 1e-9)

@@ -1,0 +1,67 @@
+"""Task-lifecycle instrumentation (paper §III-C).
+
+Every Colmena message carries a ``Timer`` that records wall-clock intervals for
+each stage of the task lifecycle: serialization, queue transit, dispatch,
+execution, result serialization, result transit.  The paper measures exactly
+these components (Fig. 5); we reproduce the measurement machinery so Thinker
+policies can reason about overheads at plan time.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+
+def now() -> float:
+    return time.perf_counter()
+
+
+@dataclass
+class Timer:
+    """Accumulates named wall-clock intervals for one task's lifecycle."""
+
+    intervals: dict = field(default_factory=dict)
+    marks: dict = field(default_factory=dict)
+
+    def mark(self, name: str) -> None:
+        self.marks[name] = now()
+
+    def record(self, name: str, seconds: float) -> None:
+        self.intervals[name] = self.intervals.get(name, 0.0) + seconds
+
+    def span(self, name: str, start_mark: str, end_mark: str) -> None:
+        if start_mark in self.marks and end_mark in self.marks:
+            self.record(name, self.marks[end_mark] - self.marks[start_mark])
+
+    @contextmanager
+    def time(self, name: str):
+        t0 = now()
+        try:
+            yield
+        finally:
+            self.record(name, now() - t0)
+
+    def total(self, *names: str) -> float:
+        return sum(self.intervals.get(n, 0.0) for n in names)
+
+    def as_dict(self) -> dict:
+        return dict(self.intervals)
+
+
+class RateMeter:
+    """Utilization / throughput meter over a sliding campaign window."""
+
+    def __init__(self):
+        self.busy = 0.0
+        self.start = now()
+        self.events = []  # (t, kind, payload)
+
+    def add_busy(self, seconds: float, kind: str = "task") -> None:
+        self.busy += seconds
+        self.events.append((now() - self.start, kind, seconds))
+
+    def utilization(self, capacity: float) -> float:
+        """busy_time / (capacity * elapsed); capacity in worker-slots."""
+        elapsed = max(now() - self.start, 1e-9)
+        return self.busy / (capacity * elapsed)

@@ -1,0 +1,60 @@
+"""Pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of all array leaves in a pytree."""
+    return sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree.leaves(tree)
+        if hasattr(leaf, "dtype")
+    )
+
+
+def tree_count_params(tree) -> int:
+    """Total element count of all array leaves."""
+    return sum(np.prod(leaf.shape, dtype=np.int64) if leaf.shape else 1
+               for leaf in jax.tree.leaves(tree) if hasattr(leaf, "shape"))
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(
+        lambda leaf: jnp.zeros(leaf.shape, dtype or leaf.dtype), tree
+    )
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda leaf: leaf.astype(dtype), tree)
+
+
+def tree_finite(tree) -> jax.Array:
+    """True iff every leaf is finite everywhere."""
+    leaves = [jnp.all(jnp.isfinite(leaf)) for leaf in jax.tree.leaves(tree)]
+    return jnp.all(jnp.stack(leaves)) if leaves else jnp.asarray(True)
+
+
+def tree_global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+              for leaf in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.asarray(0.0)
+
+
+def tree_flatten_with_paths(tree):
+    """[(path_string, leaf)] for every leaf, '/'-joined dict keys."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out

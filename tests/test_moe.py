@@ -1,0 +1,72 @@
+"""MoE dispatch semantics: implementation equivalence + capacity behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import api, moe
+
+
+def _setup(cf=8.0, dtype="float32"):
+    cfg = get_config("kimi-k2-1t-a32b", reduced=True).replace(
+        capacity_factor=cf, compute_dtype=dtype, param_dtype=dtype)
+    params = api.init_params(cfg, jax.random.PRNGKey(1))
+    p = jax.tree.map(lambda t: t[0], params["stack"]["uniform"]["ffn"])
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model),
+                          jnp.float32)
+    return cfg, p, x
+
+
+def test_dropping_equals_einsum_oracle():
+    cfg, p, x = _setup()
+    y1, a1 = moe.moe_dropping(p, x, cfg)
+    y2, a2 = moe.moe_einsum(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+    assert abs(float(a1) - float(a2)) < 1e-6
+
+
+def test_no_drops_at_high_capacity_matches_dense():
+    cfg, p, x = _setup(cf=16.0)
+    y1, _ = moe.moe_dropping(p, x, cfg)
+    y2, _ = moe.moe_dense(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_capacity_drops_reduce_output_norm():
+    """At tiny capacity most assignments drop -> output shrinks toward 0
+    but never NaNs (residual passes dropped tokens through)."""
+    cfg_hi, p, x = _setup(cf=16.0)
+    cfg_lo = cfg_hi.replace(capacity_factor=0.05)
+    y_hi, _ = moe.moe_dropping(p, x, cfg_hi)
+    y_lo, _ = moe.moe_dropping(p, x, cfg_lo)
+    assert np.all(np.isfinite(np.asarray(y_lo)))
+    assert float(jnp.linalg.norm(y_lo)) < float(jnp.linalg.norm(y_hi))
+
+
+def test_top1_routing_llama4():
+    cfg = get_config("llama4-scout-17b-a16e", reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32", capacity_factor=8.0)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    p = jax.tree.map(lambda t: t[0], params["stack"]["uniform"]["ffn"])
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model))
+    y1, _ = moe.moe_dropping(p, x, cfg)
+    y2, _ = moe.moe_dense(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_aux_loss_uniform_router_is_one():
+    """A perfectly uniform router gives the Switch aux loss its minimum
+    value (= 1 as normalized)."""
+    cfg, p, x = _setup()
+    E = cfg.num_experts
+    gates = jnp.ones((64, E)) / E
+    topi = jnp.tile(jnp.arange(cfg.num_experts_per_token)[None], (64, 1))
+    # force uniform assignment across experts
+    topi = (jnp.arange(64)[:, None] + topi) % E
+    aux = moe.aux_load_balance_loss(gates, topi, E)
+    k = cfg.num_experts_per_token
+    assert abs(float(aux) - k) < 1e-3  # sum f_e * P_e * E == k when uniform
