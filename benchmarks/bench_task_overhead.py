@@ -30,6 +30,14 @@ def run(T: int = 200, I: int = 1 << 20, N: int = 8, D: float = 0.005):
     vs = [r for r in rows if r[0] == "fig5_vs_total_overhead"][0][1]
     rows.append(("fig5_vs_improvement_pct", 100.0 * (novs - vs) / novs,
                  "expect >0 at 1MB"))
+    # true zero-length tasks with small inputs: measures the dispatch floor
+    # of the fabric itself (polling loops would show up here)
+    res = run_synapp(SynConfig(T=T, D=0.0, I=1 << 10, O=0, N=N,
+                               use_value_server=False))
+    rows.append(("d0_per_task_wall", res["per_task_wall"] * 1e6,
+                 f"n={res['n_results']}"))
+    rows.append(("d0_total_overhead", res["total_overhead_median"] * 1e6,
+                 "median lifecycle overhead at D=0"))
     return rows
 
 

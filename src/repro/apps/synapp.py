@@ -89,11 +89,15 @@ def run_synapp(cfg: SynConfig):
     medians = {k: float(np.median(v)) for k, v in comps.items()}
     busy = sum(r.task_runtime for r in thinker.results)
     overhead = {k: v for k, v in medians.items() if k != "execute"}
+    n = len(thinker.results)
     return {
         "config": cfg.__dict__,
         "medians": medians,
         "total_overhead_median": float(sum(overhead.values())),
         "makespan": makespan,
+        # end-to-end wall time amortized per task: at D=0 this exposes any
+        # dispatch-latency floor the lifecycle medians could hide
+        "per_task_wall": makespan / n if n else float("inf"),
         "utilization": busy / (cfg.N * makespan) if makespan else 0.0,
-        "n_results": len(thinker.results),
+        "n_results": n,
     }

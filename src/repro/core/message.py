@@ -6,7 +6,10 @@ Fig. 5 -- plus payload sizes, so Thinker policies can reason about
 communication overheads at plan time.
 
 Payloads physically pass through pickle on enqueue/dequeue (as they do
-through Redis in the paper); large values can bypass the queue path via
+through Redis in the paper) -- exactly once per queue hop: serialization
+time and payload size are measured from the same bytes that travel, and
+ride the queue envelope so the receiver can graft them onto the message's
+Timer (see queues.py).  Large values can bypass the queue path via
 Value-Server proxies (value_server.py), which is what Fig. 5/6 measure.
 """
 from __future__ import annotations

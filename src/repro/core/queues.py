@@ -5,25 +5,101 @@ reads them, executes, and writes Results to the topic's result queue.
 Distinct queue pairs per task type simplify multi-agent Thinkers (§III-B3).
 
 Messages physically traverse pickle bytes so the serialization /
-communication costs the paper measures are real, not simulated.  A
-configurable proxy threshold transparently moves large values through the
-Value Server instead (lazy object proxies).
+communication costs the paper measures are real, not simulated.  Each
+message is serialized **exactly once** per queue hop: the pickled payload
+travels inside a tiny in-process envelope that carries the enqueue
+timestamp plus the serialization time / payload size measured from those
+same bytes, and the receiver grafts them onto the deserialized message's
+Timer (the old fabric re-pickled every message just to make the recorded
+numbers visible to the receiver).
+
+Queues are ``Condition``-based: consumers block until a producer notifies
+them -- there is no timeout-polling on the dispatch or result-consumption
+path.  ``wake_all()`` nudges every blocked consumer so shutdown events
+propagate immediately; batched drains (``get_tasks``) amortize wakeups
+under load.
+
+A configurable proxy threshold transparently moves large values through the
+Value Server instead (lazy object proxies); those one-shot entries are
+refcounted and released once their single consumer resolves them.
 """
 from __future__ import annotations
 
-import queue
 import threading
-from typing import Iterable, Optional
+from collections import deque
+from typing import Iterable, List, NamedTuple, Optional
 
 from repro.core import message as msg
-from repro.core.value_server import ValueServer, proxy_tree, resolve_tree
+from repro.core.value_server import (ValueServer, iter_proxies, proxy_tree,
+                                     resolve_tree)
 from repro.utils.timing import now
+
+
+class _Envelope(NamedTuple):
+    t_put: float            # enqueue time (queue-transit measurement)
+    data: bytes             # the single pickle of the message
+    meta: dict              # sender-side measurements grafted on receive
+
+
+class _WakeQueue:
+    """FIFO of envelopes with Condition-notified blocking consumers.
+
+    Unlike ``queue.Queue`` polling with a short timeout, consumers park on
+    the condition until a ``put`` (or an external ``wake``, e.g. shutdown)
+    notifies them, and can drain a batch per wakeup.
+    """
+
+    def __init__(self):
+        self._items: "deque[_Envelope]" = deque()
+        self._cond = threading.Condition()
+
+    def put(self, item: _Envelope) -> None:
+        with self._cond:
+            self._items.append(item)
+            self._cond.notify()
+
+    def get(self, timeout: Optional[float] = None,
+            cancel: Optional[threading.Event] = None) -> Optional[_Envelope]:
+        deadline = None if timeout is None else now() + timeout
+        with self._cond:
+            while True:
+                if self._items:
+                    return self._items.popleft()
+                if cancel is not None and cancel.is_set():
+                    return None
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    remaining = deadline - now()
+                    if remaining <= 0:
+                        return None
+                    self._cond.wait(remaining)
+
+    def get_batch(self, max_n: int, timeout: Optional[float] = None,
+                  cancel: Optional[threading.Event] = None
+                  ) -> List[_Envelope]:
+        first = self.get(timeout=timeout, cancel=cancel)
+        if first is None:
+            return []
+        out = [first]
+        with self._cond:
+            while self._items and len(out) < max_n:
+                out.append(self._items.popleft())
+        return out
+
+    def wake(self) -> None:
+        with self._cond:
+            self._cond.notify_all()
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._items)
 
 
 class TopicQueue:
     def __init__(self):
-        self.requests: "queue.Queue[bytes]" = queue.Queue()
-        self.results: "queue.Queue[bytes]" = queue.Queue()
+        self.requests = _WakeQueue()
+        self.results = _WakeQueue()
 
 
 class ColmenaQueues:
@@ -31,16 +107,30 @@ class ColmenaQueues:
 
     def __init__(self, topics: Iterable[str], *,
                  value_server: Optional[ValueServer] = None,
-                 proxy_threshold: Optional[int] = None):
+                 proxy_threshold: Optional[int] = None,
+                 release_inputs: bool = True):
+        """release_inputs: delete one-shot proxied task inputs from the
+        Value Server once the task completes (bounds campaign memory).
+        Set False if your Thinker resolves ``result.args`` proxies after
+        completion, e.g. to resubmit the exact input payload."""
         self._topics = {t: TopicQueue() for t in topics}
         self.value_server = value_server
         self.proxy_threshold = proxy_threshold
+        self.release_inputs = release_inputs
         self._active = 0
         self._lock = threading.Lock()
         self._all_done = threading.Condition(self._lock)
 
     def topics(self):
         return list(self._topics)
+
+    def wake_all(self) -> None:
+        """Wake every blocked consumer (used on shutdown/done events)."""
+        for q in self._topics.values():
+            q.requests.wake()
+            q.results.wake()
+        with self._lock:
+            self._all_done.notify_all()
 
     # -- Thinker side -------------------------------------------------------
 
@@ -50,31 +140,45 @@ class ColmenaQueues:
         task.timer.mark("created")
         if self.value_server is not None and self.proxy_threshold is not None:
             task.args = proxy_tree(task.args, self.value_server,
-                                   self.proxy_threshold, task.timer)
+                                   self.proxy_threshold, task.timer,
+                                   one_shot=True)
             task.kwargs = proxy_tree(task.kwargs, self.value_server,
-                                     self.proxy_threshold, task.timer)
+                                     self.proxy_threshold, task.timer,
+                                     one_shot=True)
         data = msg.timed_serialize(task, task.timer, "serialize_request")
-        task.input_size = len(data)
-        # re-serialize so the receiver sees the recorded size/time
-        data = msg.serialize(task)
+        # single serialization: the measured time/size ride in the envelope
+        # (proxy_put was recorded before pickling, so it already travels
+        # inside the payload; only post-pickle measurements ride in meta)
+        meta = {"serialize_request": task.timer.intervals["serialize_request"],
+                "input_size": len(data)}
         with self._lock:
             self._active += 1
-        q = self._topics[task.topic]
-        q.requests.put((now(), data))
+        self._topics[task.topic].requests.put(_Envelope(now(), data, meta))
         return task.task_id
 
     def get_result(self, topic: str = "default",
-                   timeout: Optional[float] = None) -> Optional[msg.Result]:
-        q = self._topics[topic]
-        try:
-            t_put, data = q.results.get(timeout=timeout)
-        except queue.Empty:
+                   timeout: Optional[float] = None,
+                   cancel: Optional[threading.Event] = None
+                   ) -> Optional[msg.Result]:
+        env = self._topics[topic].results.get(timeout=timeout, cancel=cancel)
+        if env is None:
             return None
-        result = msg.deserialize(data)
-        result.timer.record("result_queue_transit", now() - t_put)
+        result: msg.Result = msg.deserialize(env.data)
+        for name, seconds in env.meta.items():
+            if name == "output_size":
+                result.output_size = seconds
+            else:
+                result.timer.record(name, seconds)
+        result.timer.record("result_queue_transit", now() - env.t_put)
+        # note the one-shot proxies before resolution replaces them in-tree
+        one_shot = ([p for p in iter_proxies(result.value) if p.one_shot]
+                    if self.value_server is not None else [])
         t0 = now()
         result.value = resolve_tree(result.value, self.value_server)
         result.timer.record("deserialize_result", now() - t0)
+        for p in one_shot:
+            # result payloads have exactly one consumer: release immediately
+            self.value_server.release(p.key)
         with self._lock:
             self._active -= 1
             if self._active <= 0:
@@ -82,10 +186,18 @@ class ColmenaQueues:
         return result
 
     def wait_until_done(self, timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else now() + timeout
         with self._lock:
-            if self._active <= 0:
-                return True
-            return self._all_done.wait(timeout)
+            while self._active > 0:
+                # re-check the predicate: wake_all() notifies unconditionally
+                if deadline is None:
+                    self._all_done.wait()
+                else:
+                    remaining = deadline - now()
+                    if remaining <= 0:
+                        return False
+                    self._all_done.wait(remaining)
+            return True
 
     @property
     def active_count(self) -> int:
@@ -94,29 +206,48 @@ class ColmenaQueues:
 
     # -- Task Server side ---------------------------------------------------
 
-    def get_task(self, topic: str,
-                 timeout: Optional[float] = None) -> Optional[msg.Task]:
-        q = self._topics[topic]
-        try:
-            t_put, data = q.requests.get(timeout=timeout)
-        except queue.Empty:
-            return None
-        task = msg.deserialize(data)
-        task.timer.record("request_queue_transit", now() - t_put)
+    def _decode_task(self, env: _Envelope) -> msg.Task:
+        task: msg.Task = msg.deserialize(env.data)
+        for name, seconds in env.meta.items():
+            if name == "input_size":
+                task.input_size = seconds
+            else:
+                task.timer.record(name, seconds)
+        task.timer.record("request_queue_transit", now() - env.t_put)
         task.timer.mark("received_by_server")
         return task
+
+    def get_task(self, topic: str, timeout: Optional[float] = None,
+                 cancel: Optional[threading.Event] = None
+                 ) -> Optional[msg.Task]:
+        env = self._topics[topic].requests.get(timeout=timeout, cancel=cancel)
+        if env is None:
+            return None
+        return self._decode_task(env)
+
+    def get_tasks(self, topic: str, max_n: int = 32,
+                  timeout: Optional[float] = None,
+                  cancel: Optional[threading.Event] = None
+                  ) -> List[msg.Task]:
+        """Blocking batched drain: one wakeup can hand back up to ``max_n``
+        queued tasks (empty list = cancelled/timed out)."""
+        envs = self._topics[topic].requests.get_batch(max_n, timeout=timeout,
+                                                      cancel=cancel)
+        return [self._decode_task(e) for e in envs]
 
     def send_result(self, result: msg.Result) -> None:
         if self.value_server is not None and self.proxy_threshold is not None:
             result.value = proxy_tree(result.value, self.value_server,
                                       self.proxy_threshold, result.timer,
-                                      prefix="serialize_result")
+                                      prefix="serialize_result",
+                                      one_shot=True)
         data = msg.timed_serialize(result, result.timer, "serialize_result")
-        result.output_size = len(data)
-        data = msg.serialize(result)
-        self._topics[result.topic].results.put((now(), data))
+        meta = {"serialize_result": result.timer.intervals["serialize_result"],
+                "output_size": len(data)}
+        self._topics[result.topic].results.put(_Envelope(now(), data, meta))
 
     def requeue(self, task: msg.Task) -> None:
         """Retry path: put a (deserialized) task back on its request queue."""
         data = msg.serialize(task)
-        self._topics[task.topic].requests.put((now(), data))
+        meta = {"input_size": task.input_size or len(data)}
+        self._topics[task.topic].requests.put(_Envelope(now(), data, meta))

@@ -6,26 +6,56 @@ executing registered Python methods -- which on the TPU adaptation are
 jit-compiled mesh programs (warm-compile caches play the role of the
 paper's "warmed" Python workers).
 
+Dispatch is event-driven: intake threads block on the queue's Condition
+and drain batches per wakeup (no 50 ms polling), and the straggler monitor
+sleeps until the earliest in-flight duplicate-dispatch *deadline* (or a
+new-work notification) rather than spinning on a fixed interval.
+
 Fault tolerance (1000+ node posture):
 - per-task retry with capped attempts; errors are captured into the Result
   (never lost),
 - straggler mitigation: tasks exceeding `straggler_factor` x the topic's
   trailing-median runtime are duplicated onto a backup worker; first
-  completion wins (duplicate results are marked and dropped by the queue
-  layer's dedup),
+  completion wins (duplicate results are dropped via a *bounded* dedup
+  window -- only ids involved in a backup race are recorded, capped at
+  `dedup_window` entries, so long campaigns don't leak memory),
 - worker crash simulation hooks for tests (inject_failure).
 """
 from __future__ import annotations
 
 import threading
 import traceback
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, Optional
 
 from repro.core import message as msg
 from repro.core.queues import ColmenaQueues
-from repro.core.value_server import resolve_tree
+from repro.core.value_server import iter_proxies, resolve_tree
 from repro.utils.timing import now
+
+
+class _BoundedIdSet:
+    """Insertion-ordered set with a capacity cap (oldest ids evicted)."""
+
+    def __init__(self, maxlen: int):
+        self.maxlen = maxlen
+        self._order: deque = deque()
+        self._set: set = set()
+
+    def add(self, item) -> None:
+        if item in self._set:
+            return
+        self._set.add(item)
+        self._order.append(item)
+        while len(self._order) > self.maxlen:
+            self._set.discard(self._order.popleft())
+
+    def __contains__(self, item) -> bool:
+        return item in self._set
+
+    def __len__(self) -> int:
+        return len(self._order)
 
 
 class MethodSpec:
@@ -41,11 +71,13 @@ class MethodSpec:
 class TaskServer:
     def __init__(self, queues: ColmenaQueues, *, workers_per_topic: int = 4,
                  resources=None, straggler_factor: Optional[float] = None,
-                 straggler_min_history: int = 5):
+                 straggler_min_history: int = 5, dedup_window: int = 4096,
+                 intake_batch: int = 32):
         self.queues = queues
         self.resources = resources
         self.straggler_factor = straggler_factor
         self.straggler_min_history = straggler_min_history
+        self.intake_batch = intake_batch
         self._methods: Dict[str, MethodSpec] = {}
         self._pools: Dict[str, ThreadPoolExecutor] = {}
         self._workers_per_topic = workers_per_topic
@@ -54,8 +86,12 @@ class TaskServer:
         self._threads: list = []
         self._runtimes: Dict[str, list] = {}     # topic -> recent runtimes
         self._inflight: Dict[str, dict] = {}     # task_id -> info
-        self._done_ids: set = set()
+        # bounded dedup: only ids involved in a backup race are recorded
+        self._raced_ids = _BoundedIdSet(dedup_window)
+        self._done_ids = _BoundedIdSet(dedup_window)
         self._lock = threading.Lock()
+        # signalled on: task started, task finished, history update, stop
+        self._straggler_cond = threading.Condition(self._lock)
 
     # -- registration ---------------------------------------------------------
 
@@ -92,6 +128,9 @@ class TaskServer:
 
     def stop(self):
         self._stop.set()
+        self.queues.wake_all()
+        with self._lock:
+            self._straggler_cond.notify_all()
         for th in self._threads:
             th.join(timeout=2)
         for p in self._pools.values():
@@ -107,23 +146,31 @@ class TaskServer:
 
     def _intake_loop(self, topic: str):
         while not self._stop.is_set():
-            task = self.queues.get_task(topic, timeout=0.05)
-            if task is None:
-                continue
+            tasks = self.queues.get_tasks(topic, max_n=self.intake_batch,
+                                          cancel=self._stop)
+            if not tasks:
+                continue                    # woken for shutdown; loop checks
             with self._lock:
-                self._inflight[task.task_id] = {
-                    "task": task, "started": None, "backup_sent": False}
-            self._pools[topic].submit(self._run_task, task)
+                for task in tasks:
+                    self._inflight[task.task_id] = {
+                        "task": task, "started": None, "backup_sent": False}
+            for task in tasks:
+                self._pools[topic].submit(self._run_task, task)
+
+    def _lost_race_locked(self, task: msg.Task) -> bool:
+        return ((task.is_backup or task.task_id in self._raced_ids)
+                and task.task_id in self._done_ids)
 
     def _run_task(self, task: msg.Task):
         spec = self._methods[task.method]
         tid = threading.current_thread().name
         with self._lock:
+            if self._lost_race_locked(task):
+                return                      # backup lost the race pre-start
             info = self._inflight.get(task.task_id)
             if info is not None:
                 info["started"] = now()
-            if task.task_id in self._done_ids:
-                return                      # backup lost the race pre-start
+                self._straggler_cond.notify_all()
         cache = self._caches.get(task.topic, {})
         acquired = False
         try:
@@ -150,14 +197,20 @@ class TaskServer:
                 hist = self._runtimes.setdefault(task.topic, [])
                 hist.append(runtime)
                 del hist[:-50]
+                self._straggler_cond.notify_all()
         except Exception as e:                         # noqa: BLE001
             task.timer.record("execute", 0.0)
+            with self._lock:
+                lost = self._lost_race_locked(task)
+            if lost:
+                return                      # winner already delivered
             if task.retries < spec.max_retries:
                 task.retries += 1
                 with self._lock:
                     self._inflight.pop(task.task_id, None)
                 if acquired and self.resources is not None:
                     self.resources.release(spec.pool, spec.slots_per_task)
+                    acquired = False
                 self.queues.requeue(task)
                 return
             result = msg.Result(
@@ -170,19 +223,42 @@ class TaskServer:
                 self.resources.release(spec.pool, spec.slots_per_task)
 
         with self._lock:
-            if task.task_id in self._done_ids:
-                return                      # duplicate (straggler backup)
-            self._done_ids.add(task.task_id)
+            raced = task.is_backup or task.task_id in self._raced_ids
+            if raced:
+                if task.task_id in self._done_ids:
+                    return                  # duplicate (straggler backup)
+                self._done_ids.add(task.task_id)
             self._inflight.pop(task.task_id, None)
+            self._straggler_cond.notify_all()
         self.queues.send_result(result)
+        self._release_task_inputs(task)
+
+    def _release_task_inputs(self, task: msg.Task) -> None:
+        """Drop one-shot input payloads from the Value Server once the task
+        reached its final outcome.  Only the race *winner* gets here (dedup),
+        and a losing duplicate that resolves afterwards fails into the
+        lost-race drop path, so releasing is safe even for straggler
+        backups.  Thinkers that re-resolve ``result.args`` after completion
+        can opt out via ``ColmenaQueues(release_inputs=False)``."""
+        vs = self.queues.value_server
+        if vs is None or not getattr(self.queues, "release_inputs", True):
+            return
+        for p in iter_proxies(task.args):
+            if p.one_shot:
+                vs.release(p.key)
+        for p in iter_proxies(task.kwargs):
+            if p.one_shot:
+                vs.release(p.key)
 
     def _straggler_loop(self):
-        import time
-        while not self._stop.is_set():
-            time.sleep(0.05)
+        while True:
+            fire = []
             with self._lock:
-                candidates = []
-                for tid, info in self._inflight.items():
+                if self._stop.is_set():
+                    return
+                tnow = now()
+                next_deadline = None
+                for _, info in self._inflight.items():
                     if info["started"] is None or info["backup_sent"]:
                         continue
                     task = info["task"]
@@ -190,10 +266,23 @@ class TaskServer:
                     if len(hist) < self.straggler_min_history:
                         continue
                     med = sorted(hist)[len(hist) // 2]
-                    if now() - info["started"] > self.straggler_factor * med:
+                    deadline = info["started"] + self.straggler_factor * med
+                    if deadline <= tnow:
                         info["backup_sent"] = True
-                        candidates.append(task)
-            for task in candidates:
+                        self._raced_ids.add(task.task_id)
+                        fire.append(task)
+                    elif next_deadline is None or deadline < next_deadline:
+                        next_deadline = deadline
+                if not fire:
+                    # sleep until the earliest duplicate-dispatch deadline,
+                    # or until new work starts / history changes / stop
+                    if next_deadline is None:
+                        self._straggler_cond.wait()
+                    else:
+                        self._straggler_cond.wait(max(next_deadline - tnow,
+                                                      0.0))
+                    continue
+            for task in fire:
                 backup = msg.Task(topic=task.topic, method=task.method,
                                   args=task.args, kwargs=task.kwargs,
                                   task_id=task.task_id, is_backup=True)

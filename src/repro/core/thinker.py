@@ -19,6 +19,12 @@ A Thinker subclass defines its policy as decorated methods:
 set.  Agents communicate with the Task Server via ``self.queues`` and with
 each other through shared state + ``self.events`` (threading primitives,
 exactly as in the paper).
+
+All agent threads are event-driven: result processors park inside the
+queue's Condition until a result (or shutdown) arrives, and event
+responders wait on a shared condition hub that both their event and
+``done`` notify -- setting ``done`` wakes every thread immediately instead
+of waiting out a poll interval.
 """
 from __future__ import annotations
 
@@ -49,13 +55,32 @@ def event_responder(event: str):
     return deco
 
 
+class HubEvent(threading.Event):
+    """Event that notifies a shared Condition (and optional wakers) on set,
+    so one thread can wait for *any* of several events without polling."""
+
+    def __init__(self, cond: threading.Condition, wakers=()):
+        super().__init__()
+        self._cond = cond
+        self._wakers = list(wakers)
+
+    def set(self) -> None:
+        super().set()
+        with self._cond:
+            self._cond.notify_all()
+        for fn in self._wakers:
+            fn()
+
+
 class BaseThinker:
     def __init__(self, queues: ColmenaQueues,
                  resources: Optional[ResourceTracker] = None):
         self.queues = queues
         self.resources = resources
-        self.done = threading.Event()
-        self.events: dict = defaultdict(threading.Event)
+        self._hub = threading.Condition()
+        # done wakes every parked agent: hub waiters AND queue consumers
+        self.done = HubEvent(self._hub, wakers=[queues.wake_all])
+        self.events: dict = defaultdict(lambda: HubEvent(self._hub))
         self._threads: list = []
         self.logger_lines: list = []
 
@@ -105,7 +130,8 @@ class BaseThinker:
     def _wrap_processor(self, fn, topic):
         def run_processor():
             while not self.done.is_set():
-                result = self.queues.get_result(topic, timeout=0.05)
+                # blocks until a result arrives; done.set() wakes it
+                result = self.queues.get_result(topic, cancel=self.done)
                 if result is None:
                     continue
                 try:
@@ -117,12 +143,17 @@ class BaseThinker:
 
     def _wrap_responder(self, fn, event):
         def run_responder():
-            while not self.done.is_set():
-                if self.events[event].wait(timeout=0.05):
-                    self.events[event].clear()
-                    try:
-                        fn()
-                    except Exception as e:             # noqa: BLE001
-                        self.log(f"responder {fn.__name__} crashed: {e!r}")
-                        self.done.set()
+            ev = self.events[event]
+            while True:
+                with self._hub:
+                    while not ev.is_set() and not self.done.is_set():
+                        self._hub.wait()
+                    if self.done.is_set():
+                        return
+                    ev.clear()
+                try:
+                    fn()
+                except Exception as e:                 # noqa: BLE001
+                    self.log(f"responder {fn.__name__} crashed: {e!r}")
+                    self.done.set()
         return run_responder

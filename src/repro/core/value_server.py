@@ -9,6 +9,15 @@ inputs such as ML model weights are fetched once per worker) and can
 startup (paper: "communication with the Value Server is overlapped with the
 task's execution").
 
+Lifecycle management (long-campaign posture): entries carry a refcount and
+the store keeps LRU order.  One-shot payloads created by the queue layer
+(``proxy_tree(one_shot=True)``) are pinned with one reference and released
+by the consumer once resolved, so per-task inputs/results are deleted
+instead of accumulating over a campaign.  Independently, a
+``capacity_bytes`` bound evicts least-recently-used *unreferenced* entries
+(e.g. superseded model weights) on insert; pinned entries are never
+evicted.
+
 TPU adaptation note (DESIGN.md §2): on a real pod the store holds
 device-resident jax.Arrays and resolution is a device-to-device copy; in
 this container the store is an in-process dict with a configurable
@@ -19,41 +28,58 @@ from __future__ import annotations
 
 import pickle
 import threading
-import uuid
+from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Optional
+from typing import Any, Iterator, Optional
+import uuid
 
 from repro.utils.timing import now
 
 
+class _Entry:
+    __slots__ = ("value", "size", "refs")
+
+    def __init__(self, value, size: int, refs: int):
+        self.value = value
+        self.size = size
+        self.refs = refs
+
+
 class ValueServer:
-    def __init__(self, *, fetch_bandwidth: Optional[float] = None):
-        """fetch_bandwidth: simulated bytes/s for fetches (None = no wait)."""
-        self._store: dict = {}
-        self._sizes: dict = {}
+    def __init__(self, *, fetch_bandwidth: Optional[float] = None,
+                 capacity_bytes: Optional[int] = None):
+        """fetch_bandwidth: simulated bytes/s for fetches (None = no wait).
+        capacity_bytes: LRU-evict unreferenced entries past this bound
+        (None = unbounded, matching the original behaviour)."""
+        self._store: "OrderedDict[str, _Entry]" = OrderedDict()
         self._lock = threading.Lock()
         self._resolver = ThreadPoolExecutor(max_workers=4,
                                             thread_name_prefix="vs-resolve")
         self.fetch_bandwidth = fetch_bandwidth
-        self.stats = {"puts": 0, "gets": 0, "bytes_put": 0, "bytes_get": 0}
+        self.capacity_bytes = capacity_bytes
+        self._bytes = 0
+        self.stats = {"puts": 0, "gets": 0, "bytes_put": 0, "bytes_get": 0,
+                      "evictions": 0, "deletes": 0}
 
-    def put(self, value, *, size: Optional[int] = None) -> str:
+    def put(self, value, *, size: Optional[int] = None, refs: int = 0) -> str:
         key = uuid.uuid4().hex
         if size is None:
             size = len(pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL))
         with self._lock:
-            self._store[key] = value
-            self._sizes[key] = size
+            self._store[key] = _Entry(value, size, refs)
+            self._bytes += size
             self.stats["puts"] += 1
             self.stats["bytes_put"] += size
+            self._evict_locked(protect=key)
         return key
 
     def get(self, key: str):
         with self._lock:
-            value = self._store[key]
-            size = self._sizes[key]
+            entry = self._store[key]
+            self._store.move_to_end(key)
             self.stats["gets"] += 1
-            self.stats["bytes_get"] += size
+            self.stats["bytes_get"] += entry.size
+            value, size = entry.value, entry.size
         if self.fetch_bandwidth:
             import time
             time.sleep(size / self.fetch_bandwidth)
@@ -61,12 +87,59 @@ class ValueServer:
 
     def size_of(self, key: str) -> int:
         with self._lock:
-            return self._sizes[key]
+            return self._store[key].size
+
+    # -- lifetime -----------------------------------------------------------
+
+    def add_ref(self, key: str) -> None:
+        with self._lock:
+            self._store[key].refs += 1
+
+    def release(self, key: str) -> bool:
+        """Drop one reference; delete the entry once unreferenced.
+        Returns True if the entry was deleted (missing keys are a no-op)."""
+        with self._lock:
+            entry = self._store.get(key)
+            if entry is None:
+                return False
+            entry.refs -= 1
+            if entry.refs > 0:
+                return False
+            del self._store[key]
+            self._bytes -= entry.size
+            self.stats["deletes"] += 1
+            return True
 
     def delete(self, key: str) -> None:
         with self._lock:
-            self._store.pop(key, None)
-            self._sizes.pop(key, None)
+            entry = self._store.pop(key, None)
+            if entry is not None:
+                self._bytes -= entry.size
+
+    def _evict_locked(self, protect: Optional[str] = None) -> None:
+        if self.capacity_bytes is None:
+            return
+        while self._bytes > self.capacity_bytes:
+            victim = next((k for k, e in self._store.items()
+                           if e.refs <= 0 and k != protect), None)
+            if victim is None:
+                return                      # everything left is pinned
+            entry = self._store.pop(victim)
+            self._bytes -= entry.size
+            self.stats["evictions"] += 1
+
+    @property
+    def total_bytes(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._store
 
     def prefetch(self, key: str) -> Future:
         return self._resolver.submit(self.get, key)
@@ -75,16 +148,21 @@ class ValueServer:
 class Proxy:
     """Lazy reference to a value in a ValueServer.
 
-    Pickles as (key, size) only; `resolve(server)` (or attribute access once
-    bound) fetches and memoizes the value.  A worker-level cache can be
-    attached via `bind` so repeated uses hit local memory.
+    Pickles as (key, size, one_shot) only; `resolve(server)` (or attribute
+    access once bound) fetches and memoizes the value.  A worker-level cache
+    can be attached via `bind` so repeated uses hit local memory.
+    ``one_shot`` marks proxies minted by the queue layer for a single
+    task/result payload; the fabric releases their store entry after the
+    consumer resolves them.
     """
 
-    __slots__ = ("key", "size", "_server", "_value", "_resolved", "_future")
+    __slots__ = ("key", "size", "one_shot", "_server", "_value", "_resolved",
+                 "_future")
 
-    def __init__(self, key: str, size: int):
+    def __init__(self, key: str, size: int, one_shot: bool = False):
         self.key = key
         self.size = size
+        self.one_shot = one_shot
         self._server = None
         self._value = None
         self._resolved = False
@@ -116,7 +194,10 @@ class Proxy:
             value = self._future.result()
         else:
             value = srv.get(self.key)
-        if cache is not None:
+        # one-shot payloads have a single consumer: caching them would turn
+        # the worker cache into the unbounded campaign-memory leak the
+        # refcounted store deletion exists to prevent
+        if cache is not None and not self.one_shot:
             cache[self.key] = value
         self._value = value
         self._resolved = True
@@ -126,7 +207,7 @@ class Proxy:
     # -- pickle: ship only the reference -------------------------------------
 
     def __reduce__(self):
-        return (Proxy, (self.key, self.size))
+        return (Proxy, (self.key, self.size, self.one_shot))
 
     def __repr__(self):
         state = "resolved" if self._resolved else "lazy"
@@ -148,17 +229,34 @@ def _leaf_size(value) -> int:
         return 0
 
 
+def iter_proxies(obj) -> Iterator[Proxy]:
+    """Yield Proxy leaves of a (shallow) container tree."""
+    if isinstance(obj, (tuple, list)):
+        leaves = obj
+    elif isinstance(obj, dict):
+        leaves = obj.values()
+    else:
+        leaves = (obj,)
+    for v in leaves:
+        if isinstance(v, Proxy):
+            yield v
+
+
 def proxy_tree(obj, server: ValueServer, threshold: int, timer=None,
-               prefix: str = "proxy"):
+               prefix: str = "proxy", one_shot: bool = False):
     """Replace any value (or container element) above `threshold` bytes with
     a Proxy.  Containers handled: tuple, list, dict (one level is enough for
-    task args/kwargs and result values)."""
+    task args/kwargs and result values).  ``one_shot=True`` pins the store
+    entry with one reference and marks the proxy so the fabric can release
+    it after its single consumer resolves it."""
     t0 = now()
+    refs = 1 if one_shot else 0
 
     def one(v):
         size = _leaf_size(v)
         if size >= threshold and not isinstance(v, Proxy):
-            return Proxy(server.put(v, size=size), size)
+            return Proxy(server.put(v, size=size, refs=refs), size,
+                         one_shot=one_shot)
         return v
 
     if isinstance(obj, tuple):

@@ -14,12 +14,11 @@ from repro.core import (AssaySpec, BaseThinker, CampaignRecord, ColmenaQueues,
 
 def make_fabric(topics, fn_map, *, workers=2, vs=None, threshold=None,
                 **server_kw):
+    retries = server_kw.pop("_retries", 1)
     queues = ColmenaQueues(topics, value_server=vs, proxy_threshold=threshold)
     server = TaskServer(queues, workers_per_topic=workers, **server_kw)
     for name, fn in fn_map.items():
-        server.register(fn, name=name, topic=name,
-                        max_retries=server_kw.pop("_retries", 1)
-                        if "_retries" in server_kw else 1)
+        server.register(fn, name=name, topic=name, max_retries=retries)
     return queues, server
 
 

@@ -1,0 +1,276 @@
+"""Event-driven dispatch fabric: single-serialization, latency floor,
+bounded straggler dedup, and value-server refcount/eviction behaviour."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BaseThinker, ColmenaQueues, TaskServer, ValueServer,
+                        agent, event_responder)
+from repro.core import message as msg_mod
+from repro.core.task_server import _BoundedIdSet
+from repro.core.value_server import Proxy
+from repro.utils.timing import now
+
+
+# ---------------------------------------------------------------------------
+# serialization: exactly one pickle per message per queue hop
+# ---------------------------------------------------------------------------
+
+def test_single_serialization_per_message(monkeypatch):
+    calls = {"n": 0}
+    real = msg_mod.serialize
+
+    def counting(obj):
+        calls["n"] += 1
+        return real(obj)
+
+    monkeypatch.setattr(msg_mod, "serialize", counting)
+    queues = ColmenaQueues(["t"])
+    server = TaskServer(queues, workers_per_topic=1)
+    server.register(lambda x: x + 1, name="t")
+    with server:
+        queues.send_task(1, method="t", topic="t")
+        r = queues.get_result("t", timeout=10)
+    assert r.success and r.value == 2
+    # one pickle for the Task hop + one for the Result hop -- no re-pickle
+    assert calls["n"] == 2, calls["n"]
+
+
+def test_sizes_and_timers_survive_single_hop():
+    """The receiver still sees serialization time / payload sizes even though
+    the message is pickled before those numbers exist."""
+    queues = ColmenaQueues(["t"])
+    server = TaskServer(queues, workers_per_topic=1)
+    server.register(lambda x: x * 3, name="t")
+    with server:
+        queues.send_task(list(range(1000)), method="t", topic="t")
+        r = queues.get_result("t", timeout=10)
+    assert r.success
+    assert r.input_size > 1000          # pickled list of 1000 ints
+    assert r.output_size > 1000
+    for key in ("serialize_request", "request_queue_transit",
+                "serialize_result", "result_queue_transit"):
+        assert key in r.timer.intervals, r.timer.intervals
+        assert r.timer.intervals[key] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# latency: no polling floor on the dispatch / result path
+# ---------------------------------------------------------------------------
+
+def test_zero_length_task_latency_below_polling_floor():
+    """A zero-length task must round-trip well under the old 50 ms poll
+    interval (an event-driven fabric does this in ~a millisecond)."""
+    queues = ColmenaQueues(["t"])
+    server = TaskServer(queues, workers_per_topic=1)
+    server.register(lambda: None, name="t")
+    lat = []
+    with server:
+        for _ in range(30):
+            t0 = now()
+            queues.send_task(method="t", topic="t")
+            r = queues.get_result("t", timeout=10)
+            lat.append(now() - t0)
+            assert r is not None and r.success
+    median = sorted(lat)[len(lat) // 2]
+    assert median < 0.025, f"median round-trip {median*1e3:.2f} ms"
+
+
+def test_get_tasks_batched_drain():
+    queues = ColmenaQueues(["t"])
+    for i in range(5):
+        queues.send_task(i, method="t", topic="t")
+    batch = queues.get_tasks("t", max_n=3, timeout=1)
+    assert len(batch) == 3
+    rest = queues.get_tasks("t", max_n=10, timeout=1)
+    assert len(rest) == 2
+    assert [t.args[0] for t in batch + rest] == [0, 1, 2, 3, 4]
+
+
+def test_event_responder_wakes_without_polling():
+    fired = threading.Event()
+
+    class T(BaseThinker):
+        @agent
+        def planner(self):
+            self.set_event("go")
+            fired.wait(5)
+            self.done.set()
+
+        @event_responder(event="go")
+        def on_go(self):
+            fired.set()
+
+    queues = ColmenaQueues(["t"])
+    t0 = now()
+    T(queues).run(timeout=10)
+    assert fired.is_set()
+    assert now() - t0 < 5, "responder never woke; planner waited out"
+
+
+# ---------------------------------------------------------------------------
+# straggler dedup: bounded window, duplicates dropped
+# ---------------------------------------------------------------------------
+
+def test_bounded_id_set_caps_memory():
+    s = _BoundedIdSet(maxlen=4)
+    for i in range(10):
+        s.add(i)
+    assert len(s) == 4
+    assert 9 in s and 6 in s
+    assert 0 not in s and 5 not in s
+
+
+def test_done_ids_only_track_raced_tasks():
+    """Without straggler races the dedup window stays empty -- ordinary
+    campaigns never accumulate completed-task ids."""
+    queues = ColmenaQueues(["t"])
+    server = TaskServer(queues, workers_per_topic=2)
+    server.register(lambda x: x, name="t")
+    with server:
+        for i in range(50):
+            queues.send_task(i, method="t", topic="t")
+        for _ in range(50):
+            assert queues.get_result("t", timeout=10) is not None
+        assert len(server._done_ids) == 0
+        assert len(server._raced_ids) == 0
+
+
+def test_straggler_race_delivers_exactly_one_result():
+    attempt = {"n": 0}
+    lock = threading.Lock()
+
+    def sim(delay):
+        with lock:
+            attempt["n"] += 1
+            is_backup = attempt["n"] > 11
+        time.sleep(0.02 if is_backup else delay)
+        return delay
+
+    queues = ColmenaQueues(["s"])
+    server = TaskServer(queues, workers_per_topic=4,
+                        straggler_factor=4.0, straggler_min_history=5)
+    server.register(sim, name="s")
+    with server:
+        for _ in range(10):
+            queues.send_task(0.02, method="s", topic="s")
+        for _ in range(10):
+            assert queues.get_result("s", timeout=10) is not None
+        queues.send_task(2.0, method="s", topic="s")
+        r = queues.get_result("s", timeout=10)
+        assert r is not None and r.success
+        # the losing duplicate must be swallowed, not delivered
+        assert queues.get_result("s", timeout=2.5) is None
+        assert len(server._done_ids) <= 1
+        assert queues.active_count <= 0
+
+
+# ---------------------------------------------------------------------------
+# value server: refcounted deletion + LRU eviction
+# ---------------------------------------------------------------------------
+
+def test_value_server_refcount_release_deletes():
+    vs = ValueServer()
+    key = vs.put(np.ones(10), refs=1)
+    assert key in vs
+    vs.add_ref(key)
+    assert not vs.release(key)          # still one reference
+    assert key in vs
+    assert vs.release(key)              # last reference dropped
+    assert key not in vs
+    assert vs.stats["deletes"] == 1
+    assert vs.release(key) is False     # idempotent on missing keys
+
+
+def test_value_server_lru_eviction_respects_pins():
+    vs = ValueServer(capacity_bytes=300)
+    old = vs.put(b"x", size=100)
+    pinned = vs.put(b"y", size=100, refs=1)
+    mid = vs.put(b"z", size=100)
+    vs.get(old)                         # old becomes most-recently-used
+    vs.put(b"w", size=100)              # over capacity: evict LRU unpinned
+    assert mid not in vs                # least-recently-used unreferenced
+    assert old in vs and pinned in vs
+    assert vs.stats["evictions"] == 1
+    assert vs.total_bytes <= 300
+
+
+def test_fabric_releases_one_shot_payloads():
+    """Proxied task inputs and result values are deleted once consumed --
+    a long campaign no longer accumulates per-task payloads."""
+    vs = ValueServer()
+    queues = ColmenaQueues(["t"], value_server=vs, proxy_threshold=1_000)
+    server = TaskServer(queues, workers_per_topic=2)
+    server.register(lambda x: x * 2.0, name="t")
+    with server:
+        for i in range(20):
+            queues.send_task(np.arange(50_000) + i, method="t", topic="t")
+        for _ in range(20):
+            r = queues.get_result("t", timeout=10)
+            assert r.success
+    assert vs.stats["puts"] == 40       # 20 inputs + 20 outputs
+    assert len(vs) == 0                 # ... all released after consumption
+    assert vs.total_bytes == 0
+
+
+def test_one_shot_payloads_skip_worker_cache():
+    """Releasing the store entry must not leave a copy in the per-topic
+    worker cache (that would just relocate the campaign memory leak)."""
+    vs = ValueServer()
+    queues = ColmenaQueues(["t"], value_server=vs, proxy_threshold=1_000)
+    server = TaskServer(queues, workers_per_topic=1)
+    server.register(lambda x: float(x.sum()), name="t")
+    with server:
+        for i in range(10):
+            queues.send_task(np.arange(10_000) + i, method="t", topic="t")
+        for _ in range(10):
+            assert queues.get_result("t", timeout=10).success
+        assert server._caches["t"] == {}
+    assert len(vs) == 0
+
+
+def test_release_inputs_opt_out_keeps_result_args_resolvable():
+    vs = ValueServer()
+    queues = ColmenaQueues(["t"], value_server=vs, proxy_threshold=1_000,
+                           release_inputs=False)
+    server = TaskServer(queues, workers_per_topic=1)
+    server.register(lambda x: float(x.sum()), name="t")
+    with server:
+        big = np.arange(10_000)
+        queues.send_task(big, method="t", topic="t")
+        r = queues.get_result("t", timeout=10)
+    assert r.success
+    # the resubmission idiom: the input payload survives completion
+    assert np.array_equal(r.args[0].resolve(vs), big)
+
+
+def test_wait_until_done_survives_spurious_wakeups():
+    queues = ColmenaQueues(["t"])
+    queues.send_task(1, method="t", topic="t")      # 1 task in flight
+    waker = threading.Thread(target=lambda: (time.sleep(0.05),
+                                             queues.wake_all()))
+    waker.start()
+    t0 = now()
+    assert queues.wait_until_done(timeout=0.5) is False
+    assert now() - t0 >= 0.4, "returned early on an unrelated wake_all()"
+    waker.join()
+
+
+def test_user_owned_proxies_are_not_auto_released():
+    """Explicitly `put` values (e.g. shared model weights) survive task
+    completion; only fabric-minted one-shot payloads are released."""
+    vs = ValueServer()
+    weights = np.ones(50_000)
+    key = vs.put(weights)
+    queues = ColmenaQueues(["t"], value_server=vs, proxy_threshold=1 << 30)
+    server = TaskServer(queues, workers_per_topic=1)
+    server.register(lambda w, x: float(w[0] + x), name="t")
+    with server:
+        for i in range(3):
+            queues.send_task(Proxy(key, weights.nbytes), float(i),
+                             method="t", topic="t")
+        for _ in range(3):
+            assert queues.get_result("t", timeout=10).success
+    assert key in vs
