@@ -31,13 +31,28 @@ def run(T: int = 200, I: int = 1 << 20, N: int = 8, D: float = 0.005):
     rows.append(("fig5_vs_improvement_pct", 100.0 * (novs - vs) / novs,
                  "expect >0 at 1MB"))
     # true zero-length tasks with small inputs: measures the dispatch floor
-    # of the fabric itself (polling loops would show up here)
-    res = run_synapp(SynConfig(T=T, D=0.0, I=1 << 10, O=0, N=N,
-                               use_value_server=False))
-    rows.append(("d0_per_task_wall", res["per_task_wall"] * 1e6,
-                 f"n={res['n_results']}"))
-    rows.append(("d0_total_overhead", res["total_overhead_median"] * 1e6,
-                 "median lifecycle overhead at D=0"))
+    # of the fabric itself (polling loops would show up here).  The backend
+    # dimension tracks the cross-process transport overhead trajectory:
+    # "local" is thread workers on in-process queues, "proc" is the paper's
+    # topology (broker-backed socket queues + worker OS processes).
+    for backend in ("local", "proc"):
+        res = run_synapp(SynConfig(T=T, D=0.0, I=1 << 10, O=0, N=N,
+                                   use_value_server=False, backend=backend))
+        suffix = "" if backend == "local" else f"[{backend}]"
+        rows.append((f"d0_per_task_wall{suffix}",
+                     res["per_task_wall"] * 1e6, f"n={res['n_results']}"))
+        rows.append((f"d0_total_overhead{suffix}",
+                     res["total_overhead_median"] * 1e6,
+                     f"median lifecycle overhead at D=0, {backend} backend"))
+    # proc-backend 1MB row alongside the fig5 numbers: what crossing real
+    # process boundaries (and the sharded VS) costs at the paper's I=1MB
+    for use_vs in (False, True):
+        res = run_synapp(SynConfig(T=T, D=D, I=I, O=0, N=N,
+                                   use_value_server=use_vs, backend="proc"))
+        tag = "vs" if use_vs else "novs"
+        rows.append((f"fig5_{tag}_total_overhead[proc]",
+                     res["total_overhead_median"] * 1e6,
+                     f"n={res['n_results']}"))
     return rows
 
 

@@ -1,9 +1,64 @@
 """Paper Fig. 6: % reduction in SynApp communication overhead with the
 Value Server vs without, as a function of input size I.  The paper finds
-VS helps above ~0.1 MB and hurts below ~10 KB."""
+VS helps above ~0.1 MB and hurts below ~10 KB.
+
+Also benchmarks the store itself along the backend dimension (in-process
+vs sharded-over-sockets) and the spill tier (memory hit vs disk fault-in
+latency), so the cross-process overhead trajectory is tracked from the
+transport PR onward."""
 from __future__ import annotations
 
+import os
+import tempfile
+
+import numpy as np
+
 from repro.apps.synapp import SynConfig, run_synapp
+from repro.core import ShardedValueServer, ValueServer
+from repro.utils.timing import now
+
+
+def _median_us(samples):
+    return float(np.median(samples)) * 1e6
+
+
+def store_rows(size: int = 1 << 20, reps: int = 20):
+    """put/get latency per backend + spill-tier hit vs miss."""
+    rows = []
+    payload = os.urandom(size)
+
+    # backend dimension: in-process dict vs shard process over a socket
+    for backend, vs in (("local", ValueServer()),
+                        ("proc", ShardedValueServer(2))):
+        puts, gets = [], []
+        for _ in range(reps):
+            t0 = now(); key = vs.put(payload); puts.append(now() - t0)
+            t0 = now(); vs.get(key); gets.append(now() - t0)
+            vs.delete(key)
+        rows.append((f"vs_put_us[{backend}]", _median_us(puts),
+                     f"I={size}"))
+        rows.append((f"vs_get_us[{backend}]", _median_us(gets),
+                     f"I={size}"))
+        if hasattr(vs, "shutdown"):
+            vs.shutdown()
+
+    # spill tier: hold two entries against a one-entry budget so each get
+    # of the cold key is a disk fault-in (miss) that spills the other;
+    # re-getting the now-hot key is a memory hit
+    with tempfile.TemporaryDirectory() as spill_dir:
+        vs = ValueServer(capacity_bytes=int(size * 1.5), spill_dir=spill_dir)
+        ka, kb = vs.put(payload), vs.put(os.urandom(size))
+        hits, misses = [], []
+        cold, hot = ka, kb
+        for _ in range(reps):
+            t0 = now(); vs.get(cold); misses.append(now() - t0)
+            t0 = now(); vs.get(cold); hits.append(now() - t0)
+            cold, hot = hot, cold
+        rows.append(("vs_get_hit_us[spill]", _median_us(hits),
+                     "memory-tier hit"))
+        rows.append(("vs_get_miss_us[spill]", _median_us(misses),
+                     "disk fault-in"))
+    return rows
 
 
 def run(T: int = 100, N: int = 8, sizes=(1 << 10, 1 << 14, 1 << 17,
@@ -20,6 +75,7 @@ def run(T: int = 100, N: int = 8, sizes=(1 << 10, 1 << 14, 1 << 17,
         pct = 100.0 * (no - vs) / max(no, 1e-12)
         rows.append((f"fig6_reduction_pct_I={I}", pct,
                      f"novs_us={no*1e6:.0f};vs_us={vs*1e6:.0f}"))
+    rows.extend(store_rows())
     return rows
 
 

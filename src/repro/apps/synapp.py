@@ -12,7 +12,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import ColmenaQueues, TaskServer, ValueServer
+from repro.core import (ColmenaQueues, ProcessPoolTaskServer,
+                        ShardedValueServer, TaskServer, ValueServer)
 from repro.core.thinker import BaseThinker, agent, result_processor
 
 
@@ -26,6 +27,11 @@ class SynConfig:
     use_value_server: bool = True
     proxy_threshold: int = 1 << 14
     seed: int = 0
+    backend: str = "local"       # "local": thread workers, in-process queues;
+                                 # "proc": broker-backed queues + N worker OS
+                                 # processes + sharded socket Value Server
+                                 # (the paper's multi-process topology)
+    vs_shards: int = 2           # Value Server shards on the proc backend
 
 
 class SynThinker(BaseThinker):
@@ -69,18 +75,32 @@ def syntask(payload: bytes, duration: float, out_bytes: int) -> bytes:
 
 def run_synapp(cfg: SynConfig):
     """Returns per-component median lifecycle times + utilization."""
-    vs = ValueServer() if cfg.use_value_server else None
+    proc = cfg.backend == "proc"
+    if not cfg.use_value_server:
+        vs = None
+    elif proc:
+        vs = ShardedValueServer(cfg.vs_shards)
+    else:
+        vs = ValueServer()
     queues = ColmenaQueues(
-        ["syntask"], value_server=vs,
+        ["syntask"], backend=cfg.backend, value_server=vs,
         proxy_threshold=cfg.proxy_threshold if cfg.use_value_server
         else None)
-    server = TaskServer(queues, workers_per_topic=cfg.N)
+    if proc:
+        server = ProcessPoolTaskServer(queues, workers_per_topic=cfg.N)
+    else:
+        server = TaskServer(queues, workers_per_topic=cfg.N)
     server.register(syntask, topic="syntask")
     thinker = SynThinker(queues, cfg)
     t0 = time.perf_counter()
-    with server:
-        thinker.run(timeout=600)
-    makespan = time.perf_counter() - t0
+    try:
+        with server:
+            thinker.run(timeout=600)
+        makespan = time.perf_counter() - t0
+    finally:
+        queues.shutdown()
+        if vs is not None and hasattr(vs, "shutdown"):
+            vs.shutdown()
 
     comps = {}
     for r in thinker.results:

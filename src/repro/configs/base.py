@@ -80,6 +80,9 @@ class ModelConfig:
                                 # the model axis between blocks (all-reduce
                                 # -> reduce-scatter + all-gather)
     fuse_ffn: bool = True
+    fuse_kv: bool = True        # K/V projections fused via a stacked leading
+                                # axis (never concat across the head dim:
+                                # that miscompiles when heads are sharded)
 
     @property
     def resolved_head_dim(self) -> int:

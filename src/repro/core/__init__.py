@@ -7,9 +7,11 @@ campaign formulation of §II-A.
 """
 from repro.core.campaign import AssaySpec, CampaignRecord, Observation  # noqa: F401
 from repro.core.message import Result, Task  # noqa: F401
+from repro.core.process_pool import ProcessPoolTaskServer  # noqa: F401
 from repro.core.queues import ColmenaQueues  # noqa: F401
 from repro.core.resources import ResourceTracker  # noqa: F401
 from repro.core.task_server import TaskServer  # noqa: F401
 from repro.core.thinker import (BaseThinker, agent, event_responder,  # noqa: F401
                                 result_processor)
+from repro.core.transport.shards import ShardedValueServer  # noqa: F401
 from repro.core.value_server import Proxy, ValueServer  # noqa: F401

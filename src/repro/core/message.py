@@ -40,6 +40,8 @@ class Task:
     input_size: int = 0          # serialized payload bytes
     retries: int = 0
     is_backup: bool = False      # straggler-mitigation duplicate
+    exclude_worker: Optional[str] = None  # backup placement: not this worker
+    bounces: int = 0             # times a worker declined (exclusion) so far
 
 
 @dataclass

@@ -1,0 +1,327 @@
+"""ProcessPoolTaskServer: registered methods execute in worker OS processes.
+
+The thread-pool ``TaskServer`` gives concurrency; this one gives the
+paper's topology -- N *processes* per topic (Parsl workers), true
+parallelism for CPU-bound simulation tasks, and per-worker **identity**
+(``host/topic/wR/pidP``) so placement decisions are possible.  It requires
+the ``proc`` queue backend: the parent (dispatcher) and the workers only
+ever meet through the broker.
+
+Dispatch path (envelope bytes are *relayed*, never re-pickled)::
+
+    Thinker --put--> topic requests --intake (parent)--> pool:<topic>
+            <--put-- topic results  <------------------- worker executes
+
+The parent's intake thread records each in-flight envelope (keyed by the
+``task_id`` riding the envelope meta -- no unpickle on the hot path) and
+forwards the bytes verbatim to the pool's dispatch channel, which workers
+drain with blocking batched gets.  Workers report ``started`` / ``done``
+events on a control channel, giving the parent the per-task worker
+identity and runtime history.
+
+Straggler mitigation with *placement*: when a task exceeds
+``straggler_factor`` x the topic's trailing-median runtime, the parent
+re-dispatches a backup with ``exclude_worker`` set to the identity that
+started the original -- a worker that sees its own identity excluded
+bounces the task back (the original is, by definition, still busy, so an
+idle *different* worker picks it up).  First completion wins: workers
+arbitrate via the broker's atomic ``claim`` op, so exactly one result per
+task id reaches the Thinker even though the racers live in different
+processes.
+
+Fault tolerance mirrors the thread server: per-task retry with capped
+attempts, errors captured into the Result, one-shot Value-Server inputs
+released by the winning worker only.
+
+Workers are **forked** (not spawned): registered methods may be closures
+or lambdas, which only fork can inherit.  CPython >= 3.12 warns about
+forking a multi-threaded process; the children here never touch the
+parent's thread state -- they immediately enter the dispatch loop and
+only run stdlib/pickle/numpy plus the registered method -- and every
+socket client reconnects per-pid, so the warning is benign for this
+usage.  Fork workers *before* starting Thinker agent threads (the
+``with pool:`` idiom does this naturally).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import socket as socketlib
+import threading
+import time
+import traceback
+from typing import Callable, Dict, Optional
+
+from repro.core import message as msg
+from repro.core.queues import ColmenaQueues
+from repro.core.task_server import MethodSpec
+from repro.core.transport import Envelope
+from repro.core.value_server import ValueServer, resolve_tree
+from repro.utils.timing import now
+
+_MAX_BOUNCES = 16       # prefer progress over placement after this many
+
+
+class ProcessPoolTaskServer:
+    def __init__(self, queues: ColmenaQueues, *, workers_per_topic: int = 2,
+                 straggler_factor: Optional[float] = None,
+                 straggler_min_history: int = 5, intake_batch: int = 32):
+        if queues.backend != "proc":
+            raise ValueError(
+                "ProcessPoolTaskServer requires ColmenaQueues(backend='proc')"
+                " -- worker processes can only reach a socket-backed fabric")
+        if isinstance(queues.value_server, ValueServer):
+            raise ValueError(
+                "an in-process ValueServer is invisible to worker processes;"
+                " use transport.shards.ShardedValueServer (or None)")
+        self.queues = queues
+        self.straggler_factor = straggler_factor
+        self.straggler_min_history = straggler_min_history
+        self.intake_batch = intake_batch
+        self._workers_per_topic = workers_per_topic
+        self._methods: Dict[str, MethodSpec] = {}
+        self._procs: list = []
+        self._threads: list = []
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._straggler_cond = threading.Condition(self._lock)
+        self._inflight: Dict[str, dict] = {}   # task_id -> info
+        self._runtimes: Dict[str, list] = {}   # topic -> recent runtimes
+        # task_id -> [identities that *started* it], for tests/diagnostics
+        self.task_history: Dict[str, list] = {}
+
+    # -- registration ---------------------------------------------------------
+
+    def register(self, fn: Callable, *, topic: Optional[str] = None,
+                 name: Optional[str] = None, max_retries: int = 1):
+        name = name or fn.__name__
+        topic = topic or name
+        self._methods[name] = MethodSpec(fn, topic=topic,
+                                         max_retries=max_retries)
+        return name
+
+    # -- channels -------------------------------------------------------------
+
+    def _dispatch_channel(self, topic: str):
+        return self.queues.transport.channel(f"pool:{topic}", "tasks")
+
+    def _control_channel(self):
+        return self.queues.transport.channel("pool:__control__", "events")
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def start(self):
+        import multiprocessing
+        ctx = multiprocessing.get_context("fork")
+        topics = self.queues.topics()
+        for topic in topics:
+            for rank in range(self._workers_per_topic):
+                p = ctx.Process(target=self._worker_main, args=(topic, rank),
+                                daemon=True, name=f"pool-{topic}-w{rank}")
+                p.start()
+                self._procs.append(p)
+            th = threading.Thread(target=self._intake_loop, args=(topic,),
+                                  daemon=True, name=f"pool-intake-{topic}")
+            th.start()
+            self._threads.append(th)
+        th = threading.Thread(target=self._monitor_loop, daemon=True,
+                              name="pool-monitor")
+        th.start()
+        self._threads.append(th)
+        if self.straggler_factor:
+            th = threading.Thread(target=self._straggler_loop, daemon=True,
+                                  name="pool-straggler")
+            th.start()
+            self._threads.append(th)
+        return self
+
+    def stop(self):
+        self._stop.set()
+        for topic in self.queues.topics():
+            ch = self._dispatch_channel(topic)
+            for _ in range(self._workers_per_topic):
+                ch.put(Envelope(now(), b"", {"stop": True}))
+        self.queues.wake_all()
+        with self._lock:
+            self._straggler_cond.notify_all()
+        for p in self._procs:
+            p.join(timeout=2)
+            if p.is_alive():
+                p.terminate()
+        for th in self._threads:
+            th.join(timeout=2)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -- parent side ----------------------------------------------------------
+
+    def _intake_loop(self, topic: str):
+        requests = self.queues._topics[topic].requests
+        dispatch = self._dispatch_channel(topic)
+        while not self._stop.is_set():
+            envs = requests.get_batch(self.intake_batch, cancel=self._stop)
+            if not envs:
+                continue                    # woken for shutdown; loop checks
+            with self._lock:
+                for env in envs:
+                    tid = env.meta.get("task_id")
+                    if tid is not None:
+                        self._inflight[tid] = {
+                            "env": env, "topic": topic, "started": None,
+                            "worker": None, "backup_sent": False}
+                self._straggler_cond.notify_all()
+            for env in envs:
+                dispatch.put(env)           # bytes relayed verbatim
+
+    def _monitor_loop(self):
+        control = self._control_channel()
+        while not self._stop.is_set():
+            envs = control.get_batch(self.intake_batch, cancel=self._stop)
+            with self._lock:
+                for env in envs:
+                    kind, tid, identity, topic, value = pickle.loads(env.data)
+                    if kind == "started":
+                        info = self._inflight.get(tid)
+                        if info is not None:
+                            info["started"] = value
+                            info["worker"] = identity
+                        self.task_history.setdefault(tid, []).append(identity)
+                    elif kind == "retry":
+                        info = self._inflight.get(tid)
+                        if info is not None:
+                            info["started"] = None  # queued again, not running
+                    elif kind == "done":
+                        self._inflight.pop(tid, None)
+                        if value is not None:
+                            hist = self._runtimes.setdefault(topic, [])
+                            hist.append(value)
+                            del hist[:-50]
+                if envs:
+                    self._straggler_cond.notify_all()
+
+    def _straggler_loop(self):
+        while True:
+            fire = []
+            with self._lock:
+                if self._stop.is_set():
+                    return
+                tnow = now()
+                next_deadline = None
+                for tid, info in self._inflight.items():
+                    if info["started"] is None or info["backup_sent"]:
+                        continue
+                    hist = self._runtimes.get(info["topic"], [])
+                    if len(hist) < self.straggler_min_history:
+                        continue
+                    med = sorted(hist)[len(hist) // 2]
+                    deadline = info["started"] + self.straggler_factor * med
+                    if deadline <= tnow:
+                        info["backup_sent"] = True
+                        fire.append((tid, info))
+                    elif next_deadline is None or deadline < next_deadline:
+                        next_deadline = deadline
+                if not fire:
+                    if next_deadline is None:
+                        self._straggler_cond.wait()
+                    else:
+                        self._straggler_cond.wait(max(next_deadline - tnow,
+                                                      0.0))
+                    continue
+            for tid, info in fire:
+                # decode only here (backups are rare): rebuild the task with
+                # backup placement metadata and re-dispatch
+                task: msg.Task = msg.deserialize(info["env"].data)
+                task.is_backup = True
+                task.exclude_worker = info["worker"]
+                data = msg.serialize(task)
+                self._dispatch_channel(info["topic"]).put(Envelope(
+                    now(), data,
+                    {"input_size": len(data), "task_id": task.task_id}))
+
+    # -- worker side ----------------------------------------------------------
+
+    def _worker_main(self, topic: str, rank: int):
+        identity = (f"{socketlib.gethostname()}/{topic}/w{rank}"
+                    f"/pid{os.getpid()}")
+        dispatch = self._dispatch_channel(topic)
+        control = self._control_channel()
+        queues = self.queues
+        cache: dict = {}
+        while True:
+            envs = dispatch.get_batch(1)
+            if not envs:
+                continue
+            env = envs[0]
+            if env.meta.get("stop"):
+                os._exit(0)
+            task = queues._decode_task(env)
+            if (task.exclude_worker == identity
+                    and task.bounces < _MAX_BOUNCES):
+                # backup placement: this is the worker running the original
+                task.bounces += 1
+                data = msg.serialize(task)
+                dispatch.put(Envelope(now(), data,
+                                      {"input_size": task.input_size,
+                                       "task_id": task.task_id}))
+                time.sleep(0.002 * task.bounces)
+                continue
+            control.put(Envelope(now(), pickle.dumps(
+                ("started", task.task_id, identity, task.topic, now())),
+                {}))
+            self._execute(task, identity, dispatch, control, cache)
+
+    def _execute(self, task: msg.Task, identity: str, dispatch, control,
+                 cache: dict):
+        queues = self.queues
+        spec = self._methods[task.method]
+        runtime = None
+        try:
+            args = resolve_tree(task.args, queues.value_server, cache,
+                                async_start=True)
+            kwargs = resolve_tree(task.kwargs, queues.value_server, cache,
+                                  async_start=True)
+            args = resolve_tree(args, queues.value_server, cache)
+            kwargs = resolve_tree(kwargs, queues.value_server, cache)
+            t0 = now()
+            value = spec.fn(*args, **kwargs)
+            runtime = now() - t0
+            task.timer.record("execute", runtime)
+            result = msg.Result(
+                task_id=task.task_id, topic=task.topic, method=task.method,
+                success=True, value=value, args=task.args,
+                kwargs=task.kwargs, timer=task.timer,
+                input_size=task.input_size, worker=identity)
+        except Exception as e:                         # noqa: BLE001
+            task.timer.record("execute", 0.0)
+            if task.retries < spec.max_retries:
+                task.retries += 1
+                data = msg.serialize(task)
+                dispatch.put(Envelope(now(), data,
+                                      {"input_size": task.input_size,
+                                       "task_id": task.task_id}))
+                # tell the parent the attempt ended: clearing 'started'
+                # stops the straggler monitor from firing a backup for a
+                # task that is queued for retry, not running anywhere
+                control.put(Envelope(now(), pickle.dumps(
+                    ("retry", task.task_id, identity, task.topic, None)),
+                    {}))
+                return
+            result = msg.Result(
+                task_id=task.task_id, topic=task.topic, method=task.method,
+                success=False, error=f"{e!r}\n{traceback.format_exc()}",
+                args=task.args, kwargs=task.kwargs, timer=task.timer,
+                input_size=task.input_size, worker=identity)
+
+        won = True
+        if self.straggler_factor:
+            # cross-process first-completion-wins: the broker arbitrates
+            won = queues.transport.claim(task.task_id)
+        if won:
+            queues.send_result(result)
+            queues.release_task_inputs(task)
+        control.put(Envelope(now(), pickle.dumps(
+            ("done", task.task_id, identity, task.topic, runtime)), {}))

@@ -7,17 +7,21 @@ Distinct queue pairs per task type simplify multi-agent Thinkers (§III-B3).
 Messages physically traverse pickle bytes so the serialization /
 communication costs the paper measures are real, not simulated.  Each
 message is serialized **exactly once** per queue hop: the pickled payload
-travels inside a tiny in-process envelope that carries the enqueue
-timestamp plus the serialization time / payload size measured from those
-same bytes, and the receiver grafts them onto the deserialized message's
-Timer (the old fabric re-pickled every message just to make the recorded
-numbers visible to the receiver).
+travels inside a tiny envelope that carries the enqueue timestamp plus the
+serialization time / payload size measured from those same bytes, and the
+receiver grafts them onto the deserialized message's Timer.
 
-Queues are ``Condition``-based: consumers block until a producer notifies
-them -- there is no timeout-polling on the dispatch or result-consumption
-path.  ``wake_all()`` nudges every blocked consumer so shutdown events
-propagate immediately; batched drains (``get_tasks``) amortize wakeups
-under load.
+*Where* the envelope waits is a pluggable transport backend
+(``repro.core.transport``):
+
+- ``backend="local"`` -- in-process ``Condition``-notified deques:
+  consumers block until a producer notifies them, ``wake_all()`` nudges
+  every blocked consumer so shutdown events propagate immediately, and
+  batched drains (``get_tasks`` / ``get_results``) amortize wakeups.
+- ``backend="proc"`` -- the envelope's single-pickle bytes become a
+  socket frame to a broker process, so Thinker and Task Server can be
+  different OS processes (the paper's multi-process topology) with the
+  exact same call-site API and the same blocking/batching semantics.
 
 A configurable proxy threshold transparently moves large values through the
 Value Server instead (lazy object proxies); those one-shot entries are
@@ -26,94 +30,39 @@ refcounted and released once their single consumer resolves them.
 from __future__ import annotations
 
 import threading
-from collections import deque
-from typing import Iterable, List, NamedTuple, Optional
+from typing import Iterable, List, Optional
 
 from repro.core import message as msg
-from repro.core.value_server import (ValueServer, iter_proxies, proxy_tree,
-                                     resolve_tree)
+from repro.core.transport import Envelope, Transport, make_transport
+from repro.core.value_server import iter_proxies, proxy_tree, resolve_tree
 from repro.utils.timing import now
 
 
-class _Envelope(NamedTuple):
-    t_put: float            # enqueue time (queue-transit measurement)
-    data: bytes             # the single pickle of the message
-    meta: dict              # sender-side measurements grafted on receive
-
-
-class _WakeQueue:
-    """FIFO of envelopes with Condition-notified blocking consumers.
-
-    Unlike ``queue.Queue`` polling with a short timeout, consumers park on
-    the condition until a ``put`` (or an external ``wake``, e.g. shutdown)
-    notifies them, and can drain a batch per wakeup.
-    """
-
-    def __init__(self):
-        self._items: "deque[_Envelope]" = deque()
-        self._cond = threading.Condition()
-
-    def put(self, item: _Envelope) -> None:
-        with self._cond:
-            self._items.append(item)
-            self._cond.notify()
-
-    def get(self, timeout: Optional[float] = None,
-            cancel: Optional[threading.Event] = None) -> Optional[_Envelope]:
-        deadline = None if timeout is None else now() + timeout
-        with self._cond:
-            while True:
-                if self._items:
-                    return self._items.popleft()
-                if cancel is not None and cancel.is_set():
-                    return None
-                if deadline is None:
-                    self._cond.wait()
-                else:
-                    remaining = deadline - now()
-                    if remaining <= 0:
-                        return None
-                    self._cond.wait(remaining)
-
-    def get_batch(self, max_n: int, timeout: Optional[float] = None,
-                  cancel: Optional[threading.Event] = None
-                  ) -> List[_Envelope]:
-        first = self.get(timeout=timeout, cancel=cancel)
-        if first is None:
-            return []
-        out = [first]
-        with self._cond:
-            while self._items and len(out) < max_n:
-                out.append(self._items.popleft())
-        return out
-
-    def wake(self) -> None:
-        with self._cond:
-            self._cond.notify_all()
-
-    def __len__(self) -> int:
-        with self._cond:
-            return len(self._items)
-
-
 class TopicQueue:
-    def __init__(self):
-        self.requests = _WakeQueue()
-        self.results = _WakeQueue()
+    def __init__(self, transport: Transport, topic: str):
+        self.requests = transport.channel(topic, "requests")
+        self.results = transport.channel(topic, "results")
 
 
 class ColmenaQueues:
     """The Thinker <-> Task Server communication fabric."""
 
     def __init__(self, topics: Iterable[str], *,
-                 value_server: Optional[ValueServer] = None,
+                 backend: str = "local",
+                 transport: Optional[Transport] = None,
+                 value_server=None,
                  proxy_threshold: Optional[int] = None,
                  release_inputs: bool = True):
-        """release_inputs: delete one-shot proxied task inputs from the
+        """backend: "local" (in-process deques) or "proc" (socket broker
+        process); ignored when an explicit ``transport`` is given.
+        release_inputs: delete one-shot proxied task inputs from the
         Value Server once the task completes (bounds campaign memory).
         Set False if your Thinker resolves ``result.args`` proxies after
         completion, e.g. to resubmit the exact input payload."""
-        self._topics = {t: TopicQueue() for t in topics}
+        self.transport = transport if transport is not None \
+            else make_transport(backend)
+        self.backend = self.transport.name
+        self._topics = {t: TopicQueue(self.transport, t) for t in topics}
         self.value_server = value_server
         self.proxy_threshold = proxy_threshold
         self.release_inputs = release_inputs
@@ -126,11 +75,15 @@ class ColmenaQueues:
 
     def wake_all(self) -> None:
         """Wake every blocked consumer (used on shutdown/done events)."""
-        for q in self._topics.values():
-            q.requests.wake()
-            q.results.wake()
+        self.transport.wake_all()
         with self._lock:
             self._all_done.notify_all()
+
+    def shutdown(self) -> None:
+        """Tear down transport-owned processes (broker).  A no-op for the
+        local backend; idempotent."""
+        self.wake_all()
+        self.transport.close()
 
     # -- Thinker side -------------------------------------------------------
 
@@ -149,20 +102,16 @@ class ColmenaQueues:
         # single serialization: the measured time/size ride in the envelope
         # (proxy_put was recorded before pickling, so it already travels
         # inside the payload; only post-pickle measurements ride in meta)
+        # task_id rides the meta so a relaying task server can track
+        # in-flight work without unpickling the payload
         meta = {"serialize_request": task.timer.intervals["serialize_request"],
-                "input_size": len(data)}
+                "input_size": len(data), "task_id": task.task_id}
         with self._lock:
             self._active += 1
-        self._topics[task.topic].requests.put(_Envelope(now(), data, meta))
+        self._topics[task.topic].requests.put(Envelope(now(), data, meta))
         return task.task_id
 
-    def get_result(self, topic: str = "default",
-                   timeout: Optional[float] = None,
-                   cancel: Optional[threading.Event] = None
-                   ) -> Optional[msg.Result]:
-        env = self._topics[topic].results.get(timeout=timeout, cancel=cancel)
-        if env is None:
-            return None
+    def _decode_result(self, env: Envelope) -> msg.Result:
         result: msg.Result = msg.deserialize(env.data)
         for name, seconds in env.meta.items():
             if name == "output_size":
@@ -185,6 +134,26 @@ class ColmenaQueues:
                 self._all_done.notify_all()
         return result
 
+    def get_result(self, topic: str = "default",
+                   timeout: Optional[float] = None,
+                   cancel: Optional[threading.Event] = None
+                   ) -> Optional[msg.Result]:
+        env = self._topics[topic].results.get(timeout=timeout, cancel=cancel)
+        if env is None:
+            return None
+        return self._decode_result(env)
+
+    def get_results(self, topic: str = "default", max_n: int = 32,
+                    timeout: Optional[float] = None,
+                    cancel: Optional[threading.Event] = None
+                    ) -> List[msg.Result]:
+        """Blocking batched drain, mirroring ``get_tasks``: one wakeup can
+        hand a result-processor thread up to ``max_n`` completed results
+        (empty list = cancelled/timed out)."""
+        envs = self._topics[topic].results.get_batch(max_n, timeout=timeout,
+                                                     cancel=cancel)
+        return [self._decode_result(e) for e in envs]
+
     def wait_until_done(self, timeout: Optional[float] = None) -> bool:
         deadline = None if timeout is None else now() + timeout
         with self._lock:
@@ -206,11 +175,13 @@ class ColmenaQueues:
 
     # -- Task Server side ---------------------------------------------------
 
-    def _decode_task(self, env: _Envelope) -> msg.Task:
+    def _decode_task(self, env: Envelope) -> msg.Task:
         task: msg.Task = msg.deserialize(env.data)
         for name, seconds in env.meta.items():
             if name == "input_size":
                 task.input_size = seconds
+            elif name == "task_id":
+                pass                        # bookkeeping, not a timer
             else:
                 task.timer.record(name, seconds)
         task.timer.record("request_queue_transit", now() - env.t_put)
@@ -244,10 +215,26 @@ class ColmenaQueues:
         data = msg.timed_serialize(result, result.timer, "serialize_result")
         meta = {"serialize_result": result.timer.intervals["serialize_result"],
                 "output_size": len(data)}
-        self._topics[result.topic].results.put(_Envelope(now(), data, meta))
+        self._topics[result.topic].results.put(Envelope(now(), data, meta))
 
     def requeue(self, task: msg.Task) -> None:
         """Retry path: put a (deserialized) task back on its request queue."""
         data = msg.serialize(task)
-        meta = {"input_size": task.input_size or len(data)}
-        self._topics[task.topic].requests.put(_Envelope(now(), data, meta))
+        meta = {"input_size": task.input_size or len(data),
+                "task_id": task.task_id}
+        self._topics[task.topic].requests.put(Envelope(now(), data, meta))
+
+    def release_task_inputs(self, task: msg.Task) -> None:
+        """Drop one-shot input payloads from the Value Server once the task
+        reached its final outcome (shared by both task-server flavours so
+        the release policy can never drift between them).  Only the race
+        *winner* calls this; Thinkers that re-resolve ``result.args`` after
+        completion opt out via ``release_inputs=False``."""
+        if self.value_server is None or not self.release_inputs:
+            return
+        for p in iter_proxies(task.args):
+            if p.one_shot:
+                self.value_server.release(p.key)
+        for p in iter_proxies(task.kwargs):
+            if p.one_shot:
+                self.value_server.release(p.key)

@@ -4,7 +4,12 @@ The paper implements this with Parsl over ZeroMQ; here Workers are thread
 pools (one pool per task topic, sized by the ResourceTracker allocation)
 executing registered Python methods -- which on the TPU adaptation are
 jit-compiled mesh programs (warm-compile caches play the role of the
-paper's "warmed" Python workers).
+paper's "warmed" Python workers).  For true process parallelism (the
+paper's worker topology) see ``repro.core.process_pool.
+ProcessPoolTaskServer``, which runs the same registered methods in worker
+OS processes over the ``proc`` queue backend and adds per-worker identity
+for backup placement; this thread server remains the low-overhead choice
+when tasks release the GIL or run on-device.
 
 Dispatch is event-driven: intake threads block on the queue's Condition
 and drain batches per wakeup (no 50 ms polling), and the straggler monitor
@@ -25,37 +30,14 @@ from __future__ import annotations
 
 import threading
 import traceback
-from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, Optional
 
 from repro.core import message as msg
 from repro.core.queues import ColmenaQueues
-from repro.core.value_server import iter_proxies, resolve_tree
+from repro.core.transport.base import BoundedIdSet as _BoundedIdSet
+from repro.core.value_server import resolve_tree
 from repro.utils.timing import now
-
-
-class _BoundedIdSet:
-    """Insertion-ordered set with a capacity cap (oldest ids evicted)."""
-
-    def __init__(self, maxlen: int):
-        self.maxlen = maxlen
-        self._order: deque = deque()
-        self._set: set = set()
-
-    def add(self, item) -> None:
-        if item in self._set:
-            return
-        self._set.add(item)
-        self._order.append(item)
-        while len(self._order) > self.maxlen:
-            self._set.discard(self._order.popleft())
-
-    def __contains__(self, item) -> bool:
-        return item in self._set
-
-    def __len__(self) -> int:
-        return len(self._order)
 
 
 class MethodSpec:
@@ -231,24 +213,10 @@ class TaskServer:
             self._inflight.pop(task.task_id, None)
             self._straggler_cond.notify_all()
         self.queues.send_result(result)
-        self._release_task_inputs(task)
-
-    def _release_task_inputs(self, task: msg.Task) -> None:
-        """Drop one-shot input payloads from the Value Server once the task
-        reached its final outcome.  Only the race *winner* gets here (dedup),
-        and a losing duplicate that resolves afterwards fails into the
-        lost-race drop path, so releasing is safe even for straggler
-        backups.  Thinkers that re-resolve ``result.args`` after completion
-        can opt out via ``ColmenaQueues(release_inputs=False)``."""
-        vs = self.queues.value_server
-        if vs is None or not getattr(self.queues, "release_inputs", True):
-            return
-        for p in iter_proxies(task.args):
-            if p.one_shot:
-                vs.release(p.key)
-        for p in iter_proxies(task.kwargs):
-            if p.one_shot:
-                vs.release(p.key)
+        # only the race *winner* gets here (dedup), and a losing duplicate
+        # that resolves afterwards fails into the lost-race drop path, so
+        # releasing is safe even for straggler backups
+        self.queues.release_task_inputs(task)
 
     def _straggler_loop(self):
         while True:

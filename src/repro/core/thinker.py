@@ -130,15 +130,24 @@ class BaseThinker:
     def _wrap_processor(self, fn, topic):
         def run_processor():
             while not self.done.is_set():
-                # blocks until a result arrives; done.set() wakes it
-                result = self.queues.get_result(topic, cancel=self.done)
-                if result is None:
-                    continue
-                try:
-                    fn(result)
-                except Exception as e:                 # noqa: BLE001
-                    self.log(f"processor {fn.__name__} crashed: {e!r}")
-                    self.done.set()
+                # blocks until results arrive; done.set() wakes it.  The
+                # batched drain hands one wakeup several completed results
+                # when the processor thread is the bottleneck (fig5): the
+                # per-result queue handshake is amortized across the batch.
+                # Once done is set, the rest of the batch is discarded --
+                # the same fate results still sitting in the queue have
+                # always had (a Thinker that sets done at a threshold,
+                # e.g. Listing 1, processes exactly its target count).
+                results = self.queues.get_results(topic, max_n=32,
+                                                  cancel=self.done)
+                for result in results:
+                    if self.done.is_set():
+                        break
+                    try:
+                        fn(result)
+                    except Exception as e:             # noqa: BLE001
+                        self.log(f"processor {fn.__name__} crashed: {e!r}")
+                        self.done.set()
         return run_processor
 
     def _wrap_responder(self, fn, event):

@@ -1,0 +1,59 @@
+"""Pluggable transport fabric: how Colmena messages cross process boundaries.
+
+The paper runs Thinker, Task Server, and the Redis queue/value store as
+*separate processes* spanning nodes (§III, Fig. 2); everything above this
+package (``ColmenaQueues``, Task Servers, Thinkers) is transport-agnostic
+and selects a backend by name:
+
+- ``local``  -- today's in-process fabric: per-topic ``Condition``-notified
+  deques (the PR-1 ``_WakeQueue``), zero-copy envelopes, no sockets.
+- ``proc``   -- a stdlib-only socket fabric: a **broker process** owns every
+  per-topic request/result queue and serves them over a Unix-domain socket
+  (TCP fallback) to any number of client processes.
+
+Both backends implement the same two-method surface: ``Transport.channel
+(topic, kind)`` returns a ``Channel`` with ``put`` / ``get_batch`` /
+``wake`` exactly mirroring the in-process queue semantics (blocking
+consumers, batched drains, ``wake_all`` for shutdown).
+
+Frame protocol (``proc`` backend)
+---------------------------------
+Every request and response is one length-prefixed frame::
+
+    uint32 header_len | header (pickle of a small dict) | payload bytes
+
+The header carries the op ("put", "get", "wake", "claim", "vs_*", ...) and
+its small arguments (topic, kind, timeouts, metadata); the payload is the
+message's **already-pickled** envelope bytes, appended verbatim.  The
+broker never unpickles a payload -- the single pickle paid by the sender
+*is* the wire format, so serialization still happens exactly once per hop
+(the envelope meta that used to ride a NamedTuple rides the frame header).
+
+Blocking semantics are preserved on the wire: a ``get`` request parks a
+per-connection handler thread on the broker's queue Condition until items
+arrive, a ``wake`` bumps the wake epoch (releasing every parked getter so
+cancel events propagate), or the client-supplied timeout lapses -- the
+client simply blocks in ``recv`` with no polling loop on either side.
+Batched drains survive too: one ``get`` frame can return up to ``max_n``
+envelopes concatenated in a single response payload.
+
+The same frame protocol serves the sharded Value Server
+(``transport.shards``): each ``ValueServerShard`` is a process exposing
+put/get/ref ops over its own socket, and clients route keys to shards by
+consistent hashing.
+"""
+from __future__ import annotations
+
+from repro.core.transport.base import Channel, Envelope, Transport  # noqa: F401
+from repro.core.transport.local import LocalTransport  # noqa: F401
+
+
+def make_transport(backend: str = "local", **kwargs) -> Transport:
+    """Create a transport backend by name (``local`` or ``proc``)."""
+    if backend == "local":
+        return LocalTransport(**kwargs)
+    if backend == "proc":
+        from repro.core.transport.proc import ProcTransport
+        return ProcTransport(**kwargs)
+    raise ValueError(f"unknown transport backend {backend!r}; "
+                     "expected 'local' or 'proc'")

@@ -1,0 +1,100 @@
+"""Transport interface: channels of single-pickle envelopes.
+
+An ``Envelope`` is what physically traverses a queue hop: the enqueue
+timestamp (for queue-transit measurement), the message's single pickle,
+and the sender-side measurements the receiver grafts onto the message's
+Timer.  Backends differ only in *where* the envelope waits: an in-process
+deque (``local``) or a broker process reached over a socket (``proc``).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import List, NamedTuple, Optional
+
+
+class BoundedIdSet:
+    """Insertion-ordered set with a capacity cap (oldest ids age out one
+    at a time).  Shared by the Task Server's straggler dedup window and
+    both transports' ``claim`` arbitration, so the eviction semantics
+    can never drift apart."""
+
+    def __init__(self, maxlen: int):
+        self.maxlen = maxlen
+        self._order: deque = deque()
+        self._set: set = set()
+
+    def add(self, item) -> None:
+        if item in self._set:
+            return
+        self._set.add(item)
+        self._order.append(item)
+        while len(self._order) > self.maxlen:
+            self._set.discard(self._order.popleft())
+
+    def claim(self, item) -> bool:
+        """Atomic-within-the-caller's-lock test-and-add: True for exactly
+        the first claimant of ``item`` inside the window."""
+        if item in self._set:
+            return False
+        self.add(item)
+        return True
+
+    def __contains__(self, item) -> bool:
+        return item in self._set
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+
+class Envelope(NamedTuple):
+    t_put: float            # enqueue time (queue-transit measurement)
+    data: bytes             # the single pickle of the message
+    meta: dict              # sender-side measurements grafted on receive
+
+
+class Channel:
+    """One direction of one topic (requests or results)."""
+
+    def put(self, env: Envelope) -> None:
+        raise NotImplementedError
+
+    def get(self, timeout: Optional[float] = None,
+            cancel: Optional[threading.Event] = None) -> Optional[Envelope]:
+        batch = self.get_batch(1, timeout=timeout, cancel=cancel)
+        return batch[0] if batch else None
+
+    def get_batch(self, max_n: int, timeout: Optional[float] = None,
+                  cancel: Optional[threading.Event] = None
+                  ) -> List[Envelope]:
+        raise NotImplementedError
+
+    def wake(self) -> None:
+        """Nudge every blocked consumer (shutdown/cancel propagation)."""
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+
+class Transport:
+    """Factory of channels plus fabric-wide control operations."""
+
+    name = "base"
+
+    def channel(self, topic: str, kind: str) -> Channel:
+        raise NotImplementedError
+
+    def wake_all(self) -> None:
+        raise NotImplementedError
+
+    def claim(self, task_id: str) -> bool:
+        """Atomic first-completion claim (straggler-race dedup across
+        processes).  Returns True for exactly one claimant per id.  The
+        local backend has no cross-process races to arbitrate, so the
+        in-process Task Server keeps its own dedup window and this
+        default is only used by the process pool."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Tear down any processes/sockets owned by this transport."""

@@ -1,0 +1,155 @@
+"""The broker process: owner of every per-topic request/result queue.
+
+One broker serves all queue channels of a fabric over a single listening
+socket.  Clients (Thinker process, Task Server intake threads, pool
+workers) speak the frame protocol of ``frames.py``; the broker keeps a
+``deque`` + ``Condition`` per (topic, kind) -- the same event-driven
+structure as the local backend, just on the other side of a socket:
+
+- ``put``  appends the sender's envelope bytes verbatim and notifies one
+  parked getter (payloads are relayed, never unpickled).
+- ``get``  parks the connection's handler thread on the queue Condition
+  until items arrive, the wake epoch bumps, or the timeout lapses; up to
+  ``max_n`` envelopes come back concatenated in one response frame.
+- ``wake`` bumps every queue's epoch and notifies all -- pending gets
+  return (possibly empty) so client-side cancel events propagate without
+  any polling loop.
+- ``claim`` is an atomic first-completion test-and-set used by worker
+  pools to dedup straggler-race duplicates across processes (bounded
+  window, mirroring the in-process Task Server's ``_BoundedIdSet``).
+
+The listening socket is bound in the *parent* before forking the broker
+process, so there is no readiness race: by the time the constructor
+returns the address is connectable.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.transport import frames
+from repro.core.transport.base import BoundedIdSet
+from repro.utils.timing import now
+
+
+class _BrokerQueue:
+    def __init__(self):
+        self.items: deque = deque()        # (t_put, meta, data)
+        self.cond = threading.Condition()
+        self.epoch = 0
+
+
+class Broker:
+    def __init__(self, claim_window: int = 1 << 16):
+        self._queues: Dict[Tuple[str, str], _BrokerQueue] = {}
+        self._qlock = threading.Lock()
+        self._claimed = BoundedIdSet(claim_window)
+        self._claim_lock = threading.Lock()
+
+    def _queue(self, topic: str, kind: str) -> _BrokerQueue:
+        with self._qlock:
+            q = self._queues.get((topic, kind))
+            if q is None:
+                q = self._queues[(topic, kind)] = _BrokerQueue()
+            return q
+
+    # -- ops ----------------------------------------------------------------
+
+    def put(self, topic: str, kind: str, t_put: float, meta: dict,
+            data: bytes) -> None:
+        q = self._queue(topic, kind)
+        with q.cond:
+            q.items.append((t_put, meta, data))
+            q.cond.notify()
+
+    def get(self, topic: str, kind: str, max_n: int,
+            timeout: Optional[float], last_epoch: Optional[int]
+            ) -> Tuple[List[tuple], bool, int]:
+        """Blocking batched drain.  Returns (items, woken, epoch): ``woken``
+        tells the client an empty response came from a wake (re-check
+        cancel and possibly re-park) rather than a timeout.
+
+        ``last_epoch`` is the wake epoch the client observed on its
+        previous response (None on a channel's first request).  Parking
+        only happens when the client's epoch is current, so a ``wake``
+        that lands between the client's cancel check and this request
+        is detected instead of lost -- the first request of a channel
+        never parks (it syncs the epoch and returns woken), closing the
+        race without any polling."""
+        q = self._queue(topic, kind)
+        deadline = None if timeout is None else now() + timeout
+        with q.cond:
+            if not q.items and (last_epoch is None
+                                or q.epoch != last_epoch):
+                return [], True, q.epoch    # epoch sync / missed wake
+            while not q.items:
+                if q.epoch != last_epoch:
+                    return [], True, q.epoch
+                if deadline is None:
+                    q.cond.wait()
+                else:
+                    remaining = deadline - now()
+                    if remaining <= 0:
+                        return [], False, q.epoch
+                    q.cond.wait(remaining)
+            out = []
+            while q.items and len(out) < max_n:
+                out.append(q.items.popleft())
+            return out, False, q.epoch
+
+    def wake(self) -> None:
+        with self._qlock:
+            queues = list(self._queues.values())
+        for q in queues:
+            with q.cond:
+                q.epoch += 1
+                q.cond.notify_all()
+
+    def claim(self, task_id: str) -> bool:
+        with self._claim_lock:
+            return self._claimed.claim(task_id)
+
+    def qlen(self, topic: str, kind: str) -> int:
+        q = self._queue(topic, kind)
+        with q.cond:
+            return len(q.items)
+
+    # -- frame dispatch -------------------------------------------------------
+
+    def handle(self, header: dict, payload: bytes
+               ) -> Optional[Tuple[dict, bytes]]:
+        op = header["op"]
+        if op == "put":
+            self.put(header["topic"], header["kind"], header["t_put"],
+                     header["meta"], payload)
+            return {"ok": True}, b""
+        if op == "get":
+            items, woken, epoch = self.get(
+                header["topic"], header["kind"], header["max_n"],
+                header["timeout"], header.get("epoch"))
+            lens, blobs = [], []
+            for t_put, meta, data in items:
+                lens.append((t_put, meta, len(data)))
+                blobs.append(data)
+            return {"envs": lens, "woken": woken,
+                    "epoch": epoch}, b"".join(blobs)
+        if op == "wake":
+            self.wake()
+            return {"ok": True}, b""
+        if op == "claim":
+            return {"claimed": self.claim(header["id"])}, b""
+        if op == "len":
+            return {"n": self.qlen(header["topic"], header["kind"])}, b""
+        if op == "ping":
+            return {"ok": True}, b""
+        if op == "shutdown":
+            return None
+        return {"error": f"unknown op {op!r}"}, b""
+
+
+def broker_main(sock) -> None:
+    """Entry point of the broker process (listening socket inherited from
+    the parent fork)."""
+    broker = Broker()
+    frames.serve_forever(sock, broker.handle, threading.Event())

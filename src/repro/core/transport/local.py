@@ -1,0 +1,96 @@
+"""In-process transport: per-channel Condition-notified deques.
+
+This is the PR-1 ``_WakeQueue`` fabric, factored out of ``queues.py`` so
+it sits behind the same ``Transport`` interface as the socket backend.
+Consumers park on the condition until a ``put`` (or an external ``wake``,
+e.g. shutdown) notifies them, and can drain a batch per wakeup -- there is
+no timeout-polling anywhere on the dispatch or result-consumption path.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.transport.base import (BoundedIdSet, Channel, Envelope,
+                                       Transport)
+from repro.utils.timing import now
+
+
+class LocalChannel(Channel):
+    """FIFO of envelopes with Condition-notified blocking consumers."""
+
+    def __init__(self):
+        self._items: "deque[Envelope]" = deque()
+        self._cond = threading.Condition()
+
+    def put(self, env: Envelope) -> None:
+        with self._cond:
+            self._items.append(env)
+            self._cond.notify()
+
+    def get(self, timeout: Optional[float] = None,
+            cancel: Optional[threading.Event] = None) -> Optional[Envelope]:
+        deadline = None if timeout is None else now() + timeout
+        with self._cond:
+            while True:
+                if self._items:
+                    return self._items.popleft()
+                if cancel is not None and cancel.is_set():
+                    return None
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    remaining = deadline - now()
+                    if remaining <= 0:
+                        return None
+                    self._cond.wait(remaining)
+
+    def get_batch(self, max_n: int, timeout: Optional[float] = None,
+                  cancel: Optional[threading.Event] = None
+                  ) -> List[Envelope]:
+        first = self.get(timeout=timeout, cancel=cancel)
+        if first is None:
+            return []
+        out = [first]
+        with self._cond:
+            while self._items and len(out) < max_n:
+                out.append(self._items.popleft())
+        return out
+
+    def wake(self) -> None:
+        with self._cond:
+            self._cond.notify_all()
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._items)
+
+
+class LocalTransport(Transport):
+    name = "local"
+
+    def __init__(self, claim_window: int = 1 << 16):
+        self._channels: Dict[Tuple[str, str], LocalChannel] = {}
+        self._lock = threading.Lock()
+        self._claimed = BoundedIdSet(claim_window)
+
+    def channel(self, topic: str, kind: str) -> LocalChannel:
+        with self._lock:
+            ch = self._channels.get((topic, kind))
+            if ch is None:
+                ch = self._channels[(topic, kind)] = LocalChannel()
+            return ch
+
+    def wake_all(self) -> None:
+        with self._lock:
+            channels = list(self._channels.values())
+        for ch in channels:
+            ch.wake()
+
+    def claim(self, task_id: str) -> bool:
+        with self._lock:
+            return self._claimed.claim(task_id)
+
+    def close(self) -> None:
+        self.wake_all()

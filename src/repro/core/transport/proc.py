@@ -1,0 +1,134 @@
+"""Client side of the socket fabric: ``ProcTransport`` + ``ProcChannel``.
+
+``ProcTransport()`` binds a Unix-domain socket (TCP fallback), forks the
+broker process on it, and hands out ``ProcChannel`` objects whose
+``put``/``get_batch`` translate one-to-one into broker frames.  Consumers
+block in ``recv`` while the broker parks their handler thread on the queue
+Condition -- there is no polling on either side of the wire.  The
+transport object is safe to capture in forked workers: its ``FrameClient``
+reopens connections per (pid, thread).
+"""
+from __future__ import annotations
+
+import atexit
+import multiprocessing
+import os
+import tempfile
+import threading
+from typing import List, Optional
+
+from repro.core.transport import frames
+from repro.core.transport.base import Channel, Envelope, Transport
+from repro.core.transport.broker import broker_main
+from repro.utils.timing import now
+
+_mp = multiprocessing.get_context("fork")
+
+
+class ProcChannel(Channel):
+    def __init__(self, transport: "ProcTransport", topic: str, kind: str):
+        self._t = transport
+        self.topic = topic
+        self.kind = kind
+        # last wake epoch observed from the broker, tracked PER THREAD
+        # (like FrameClient's sockets): the broker only parks a get whose
+        # epoch is current, so a wake_all landing between a thread's
+        # cancel check and its request is detected, never lost -- and one
+        # consumer thread absorbing a wake cannot advance a sibling
+        # consumer's epoch past the wake it still needs to observe
+        self._tls = threading.local()
+
+    def put(self, env: Envelope) -> None:
+        self._t.client.request(
+            {"op": "put", "topic": self.topic, "kind": self.kind,
+             "t_put": env.t_put, "meta": env.meta}, env.data)
+
+    def get_batch(self, max_n: int, timeout: Optional[float] = None,
+                  cancel: Optional[threading.Event] = None
+                  ) -> List[Envelope]:
+        deadline = None if timeout is None else now() + timeout
+        while True:
+            if cancel is not None and cancel.is_set():
+                return []
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - now()
+                if remaining <= 0:
+                    return []
+            epoch = getattr(self._tls, "epoch", None)
+            header, blob = self._t.client.request(
+                {"op": "get", "topic": self.topic, "kind": self.kind,
+                 "max_n": max_n, "timeout": remaining,
+                 "epoch": epoch}, retry=True)
+            self._tls.epoch = header["epoch"]
+            if header["envs"]:
+                out, off = [], 0
+                for t_put, meta, n in header["envs"]:
+                    out.append(Envelope(t_put, blob[off:off + n], meta))
+                    off += n
+                return out
+            if not header["woken"]:
+                return []                   # server-side timeout lapsed
+            # woken (wake_all) or first-request epoch sync: re-check
+            # cancel/deadline, then re-park with a current epoch
+
+    def wake(self) -> None:
+        self._t.wake_all()
+
+    def __len__(self) -> int:
+        header, _ = self._t.client.request(
+            {"op": "len", "topic": self.topic, "kind": self.kind},
+            retry=True)
+        return header["n"]
+
+
+class ProcTransport(Transport):
+    name = "proc"
+
+    def __init__(self, address: Optional[tuple] = None):
+        """address: connect to an existing broker (another process's
+        fabric); None forks a fresh broker owned by this transport."""
+        self._proc = None
+        self._dir = None
+        self._owner_pid = os.getpid()
+        if address is None:
+            self._dir = tempfile.mkdtemp(prefix="colmena-broker-")
+            sock, address = frames.make_server_socket(
+                os.path.join(self._dir, "broker.sock"))
+            self._proc = _mp.Process(target=broker_main, args=(sock,),
+                                     daemon=True, name="colmena-broker")
+            self._proc.start()
+            sock.close()                    # the broker child owns it now
+            atexit.register(self.close)
+        self.address = address
+        self.client = frames.FrameClient(address)
+
+    def channel(self, topic: str, kind: str) -> ProcChannel:
+        return ProcChannel(self, topic, kind)
+
+    def wake_all(self) -> None:
+        try:
+            self.client.request({"op": "wake"}, retry=True)
+        except (ConnectionError, OSError):
+            pass                    # broker already torn down: nothing parked
+
+    def claim(self, task_id: str) -> bool:
+        header, _ = self.client.request({"op": "claim", "id": task_id})
+        return header["claimed"]
+
+    def close(self) -> None:
+        # only the process that forked the broker may tear it down
+        if self._proc is None or os.getpid() != self._owner_pid:
+            return
+        proc, self._proc = self._proc, None
+        try:
+            self.client.request({"op": "shutdown"})
+        except (ConnectionError, OSError):
+            pass
+        self.client.close()
+        proc.join(timeout=2)
+        if proc.is_alive():
+            proc.terminate()
+        if self._dir is not None:
+            import shutil
+            shutil.rmtree(self._dir, ignore_errors=True)

@@ -1,0 +1,256 @@
+"""Sharded Value Server over the socket fabric.
+
+Each ``ValueServerShard`` is a process holding one ``ValueServer`` (with
+its own ``capacity_bytes`` LRU bound and spill-to-disk tier) and serving
+it over the frame protocol: values travel as the client's pickle bytes and
+are stored *as bytes*, so a shard never re-pickles payloads and the spill
+files round-trip byte-identically.
+
+``ShardedValueServer`` is the client: it implements the exact in-process
+``ValueServer`` API (put/get/add_ref/release/delete/size_of/prefetch/
+stats) so ``ColmenaQueues`` proxies and worker caches are oblivious to the
+deployment.  Keys are routed by **consistent hashing** (md5 ring with
+virtual nodes): adding a shard moves only ~1/N of the key space, matching
+how a multi-host deployment would rebalance.  The client is fork-safe
+(``FrameClient`` reopens connections per pid), which is how pool workers
+in other processes resolve the same proxies.
+"""
+from __future__ import annotations
+
+import atexit
+import bisect
+import hashlib
+import multiprocessing
+import os
+import pickle
+import tempfile
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, List, Optional, Tuple
+import uuid
+
+from repro.core.transport import frames
+
+_mp = multiprocessing.get_context("fork")
+
+
+class HashRing:
+    """Consistent-hash ring over shard indices (md5, virtual nodes)."""
+
+    def __init__(self, n_nodes: int, vnodes: int = 64):
+        points: List[Tuple[int, int]] = []
+        for node in range(n_nodes):
+            for v in range(vnodes):
+                h = hashlib.md5(f"shard-{node}:{v}".encode()).digest()
+                points.append((int.from_bytes(h[:8], "big"), node))
+        points.sort()
+        self._hashes = [p[0] for p in points]
+        self._nodes = [p[1] for p in points]
+
+    def node(self, key: str) -> int:
+        h = int.from_bytes(
+            hashlib.md5(key.encode()).digest()[:8], "big")
+        i = bisect.bisect(self._hashes, h) % len(self._hashes)
+        return self._nodes[i]
+
+
+# ---------------------------------------------------------------------------
+# Shard server process
+# ---------------------------------------------------------------------------
+
+
+def _shard_main(sock, capacity_bytes: Optional[int], spill_dir: Optional[str],
+                fetch_bandwidth: Optional[float]) -> None:
+    from repro.core.value_server import ValueServer
+    vs = ValueServer(capacity_bytes=capacity_bytes, spill_dir=spill_dir,
+                     fetch_bandwidth=fetch_bandwidth)
+
+    def handle(header: dict, payload: bytes):
+        op = header["op"]
+        if op == "vs_put":
+            # stored as the client's pickle bytes: never re-pickled here
+            key = vs.put(payload, size=header["size"], refs=header["refs"],
+                         key=header["key"])
+            return {"key": key}, b""
+        if op == "vs_get":
+            try:
+                return {"ok": True}, vs.get(header["key"])
+            except KeyError:
+                return {"ok": False}, b""
+        if op == "vs_add_ref":
+            vs.add_ref(header["key"])
+            return {"ok": True}, b""
+        if op == "vs_release":
+            return {"deleted": vs.release(header["key"])}, b""
+        if op == "vs_delete":
+            vs.delete(header["key"])
+            return {"ok": True}, b""
+        if op == "vs_size_of":
+            try:
+                return {"size": vs.size_of(header["key"])}, b""
+            except KeyError:
+                return {"size": None}, b""
+        if op == "vs_contains":
+            return {"in": header["key"] in vs}, b""
+        if op == "vs_stats":
+            return {"stats": dict(vs.stats), "len": len(vs),
+                    "bytes": vs.total_bytes,
+                    "spilled_bytes": vs.spilled_bytes}, b""
+        if op == "ping":
+            return {"ok": True}, b""
+        if op == "shutdown":
+            return None
+        return {"error": f"unknown op {op!r}"}, b""
+
+    frames.serve_forever(sock, handle, threading.Event())
+
+
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+
+class ShardedValueServer:
+    """Drop-in ValueServer client routing keys to shard processes.
+
+    ``capacity_bytes`` is **per shard**; with ``spill=True`` each shard
+    gets its own spill directory under a shared temp root, so the
+    aggregate working set is ``num_shards * capacity_bytes`` in memory
+    plus unbounded disk."""
+
+    def __init__(self, num_shards: int = 2, *,
+                 capacity_bytes: Optional[int] = None,
+                 spill: bool = False,
+                 fetch_bandwidth: Optional[float] = None,
+                 vnodes: int = 64):
+        assert num_shards >= 1
+        self.num_shards = num_shards
+        self._dir = tempfile.mkdtemp(prefix="colmena-vs-")
+        self._owner_pid = os.getpid()
+        self._procs = []
+        self._clients: List[frames.FrameClient] = []
+        for i in range(num_shards):
+            sock, address = frames.make_server_socket(
+                os.path.join(self._dir, f"shard{i}.sock"))
+            spill_dir = (os.path.join(self._dir, f"spill{i}")
+                         if spill else None)
+            p = _mp.Process(target=_shard_main,
+                            args=(sock, capacity_bytes, spill_dir,
+                                  fetch_bandwidth),
+                            daemon=True, name=f"colmena-vs-shard{i}")
+            p.start()
+            sock.close()
+            self._procs.append(p)
+            self._clients.append(frames.FrameClient(address))
+        self._ring = HashRing(num_shards, vnodes=vnodes)
+        self._resolver: Optional[ThreadPoolExecutor] = None
+        self._resolver_pid = None
+        atexit.register(self.shutdown)
+
+    def shard_of(self, key: str) -> int:
+        return self._ring.node(key)
+
+    def _client(self, key: str) -> frames.FrameClient:
+        return self._clients[self._ring.node(key)]
+
+    # -- ValueServer API ------------------------------------------------------
+
+    def put(self, value, *, size: Optional[int] = None, refs: int = 0) -> str:
+        data = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
+        if size is None:
+            size = len(data)
+        key = uuid.uuid4().hex
+        # key is minted client-side so routing needs no coordination; the
+        # shard adopts it verbatim
+        header, _ = self._client(key).request(
+            {"op": "vs_put", "key": key, "size": size, "refs": refs}, data)
+        return header["key"]
+
+    def get(self, key: str):
+        header, payload = self._client(key).request(
+            {"op": "vs_get", "key": key}, retry=True)
+        if not header["ok"]:
+            raise KeyError(key)
+        return pickle.loads(payload)
+
+    def add_ref(self, key: str) -> None:
+        self._client(key).request({"op": "vs_add_ref", "key": key})
+
+    def release(self, key: str) -> bool:
+        header, _ = self._client(key).request(
+            {"op": "vs_release", "key": key})
+        return header["deleted"]
+
+    def delete(self, key: str) -> None:
+        self._client(key).request({"op": "vs_delete", "key": key}, retry=True)
+
+    def size_of(self, key: str) -> int:
+        header, _ = self._client(key).request(
+            {"op": "vs_size_of", "key": key}, retry=True)
+        if header["size"] is None:
+            raise KeyError(key)
+        return header["size"]
+
+    def __contains__(self, key: str) -> bool:
+        header, _ = self._client(key).request(
+            {"op": "vs_contains", "key": key}, retry=True)
+        return header["in"]
+
+    def prefetch(self, key: str) -> Future:
+        # the executor is per-process: a forked worker lazily builds its own
+        if self._resolver is None or self._resolver_pid != os.getpid():
+            self._resolver = ThreadPoolExecutor(
+                max_workers=4, thread_name_prefix="vs-resolve")
+            self._resolver_pid = os.getpid()
+        return self._resolver.submit(self.get, key)
+
+    # -- introspection --------------------------------------------------------
+
+    def per_shard_stats(self) -> List[dict]:
+        out = []
+        for c in self._clients:
+            header, _ = c.request({"op": "vs_stats"}, retry=True)
+            out.append({"len": header["len"], "bytes": header["bytes"],
+                        "spilled_bytes": header["spilled_bytes"],
+                        **header["stats"]})
+        return out
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        # aggregate only the counters the in-process ValueServer.stats has
+        # (len/bytes/spilled_bytes live on their own properties), keeping
+        # the drop-in key set identical across deployments
+        agg: Dict[str, int] = {}
+        for c in self._clients:
+            header, _ = c.request({"op": "vs_stats"}, retry=True)
+            for k, v in header["stats"].items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def __len__(self) -> int:
+        return sum(s["len"] for s in self.per_shard_stats())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s["bytes"] for s in self.per_shard_stats())
+
+    @property
+    def spilled_bytes(self) -> int:
+        return sum(s["spilled_bytes"] for s in self.per_shard_stats())
+
+    def shutdown(self) -> None:
+        if os.getpid() != self._owner_pid or not self._procs:
+            return
+        procs, self._procs = self._procs, []
+        for c in self._clients:
+            try:
+                c.request({"op": "shutdown"})
+            except (ConnectionError, OSError):
+                pass
+            c.close()
+        for p in procs:
+            p.join(timeout=2)
+            if p.is_alive():
+                p.terminate()
+        import shutil
+        shutil.rmtree(self._dir, ignore_errors=True)

@@ -18,6 +18,13 @@ instead of accumulating over a campaign.  Independently, a
 (e.g. superseded model weights) on insert; pinned entries are never
 evicted.
 
+Spill tier: with ``spill_dir`` set, capacity evictions land in a file
+store (one pickle per key) instead of being discarded, and a later ``get``
+faults the entry back into the memory tier byte-identically (possibly
+spilling something else to make room).  This turns ``capacity_bytes`` from
+a destructive bound into a working-set bound, which is what the sharded
+deployment (``transport.shards``) runs per shard.
+
 TPU adaptation note (DESIGN.md §2): on a real pod the store holds
 device-resident jax.Arrays and resolution is a device-to-device copy; in
 this container the store is an in-process dict with a configurable
@@ -26,6 +33,7 @@ crossover behaviour honestly.
 """
 from __future__ import annotations
 
+import os
 import pickle
 import threading
 from collections import OrderedDict
@@ -47,22 +55,33 @@ class _Entry:
 
 class ValueServer:
     def __init__(self, *, fetch_bandwidth: Optional[float] = None,
-                 capacity_bytes: Optional[int] = None):
+                 capacity_bytes: Optional[int] = None,
+                 spill_dir: Optional[str] = None):
         """fetch_bandwidth: simulated bytes/s for fetches (None = no wait).
         capacity_bytes: LRU-evict unreferenced entries past this bound
-        (None = unbounded, matching the original behaviour)."""
+        (None = unbounded, matching the original behaviour).
+        spill_dir: evictions spill to files here (created if missing) and
+        fault back in on ``get`` instead of being discarded."""
         self._store: "OrderedDict[str, _Entry]" = OrderedDict()
         self._lock = threading.Lock()
         self._resolver = ThreadPoolExecutor(max_workers=4,
                                             thread_name_prefix="vs-resolve")
         self.fetch_bandwidth = fetch_bandwidth
         self.capacity_bytes = capacity_bytes
+        self.spill_dir = spill_dir
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
+        self._spilled: dict = {}            # key -> [size, refs]
         self._bytes = 0
         self.stats = {"puts": 0, "gets": 0, "bytes_put": 0, "bytes_get": 0,
-                      "evictions": 0, "deletes": 0}
+                      "evictions": 0, "deletes": 0, "spills": 0,
+                      "spill_hits": 0}
 
-    def put(self, value, *, size: Optional[int] = None, refs: int = 0) -> str:
-        key = uuid.uuid4().hex
+    def put(self, value, *, size: Optional[int] = None, refs: int = 0,
+            key: Optional[str] = None) -> str:
+        """key: adopt a caller-minted key (the sharded deployment mints
+        keys client-side so consistent-hash routing needs no handshake)."""
+        key = key or uuid.uuid4().hex
         if size is None:
             size = len(pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL))
         with self._lock:
@@ -75,7 +94,9 @@ class ValueServer:
 
     def get(self, key: str):
         with self._lock:
-            entry = self._store[key]
+            entry = self._store.get(key)
+            if entry is None:
+                entry = self._fault_in_locked(key)
             self._store.move_to_end(key)
             self.stats["gets"] += 1
             self.stats["bytes_get"] += entry.size
@@ -87,12 +108,21 @@ class ValueServer:
 
     def size_of(self, key: str) -> int:
         with self._lock:
+            if key in self._spilled:
+                return self._spilled[key][0]
             return self._store[key].size
 
     # -- lifetime -----------------------------------------------------------
 
     def add_ref(self, key: str) -> None:
         with self._lock:
+            spilled = self._spilled.get(key)
+            if spilled is not None and key not in self._store:
+                # pure metadata update: no reason to pay the disk fault-in
+                # here -- the refs ride the spill index and are restored
+                # when a get brings the entry back
+                spilled[1] += 1
+                return
             self._store[key].refs += 1
 
     def release(self, key: str) -> bool:
@@ -101,7 +131,16 @@ class ValueServer:
         with self._lock:
             entry = self._store.get(key)
             if entry is None:
-                return False
+                spilled = self._spilled.get(key)
+                if spilled is None:
+                    return False
+                spilled[1] -= 1
+                if spilled[1] > 0:
+                    return False
+                del self._spilled[key]
+                self._remove_spill_file(key)
+                self.stats["deletes"] += 1
+                return True
             entry.refs -= 1
             if entry.refs > 0:
                 return False
@@ -115,6 +154,40 @@ class ValueServer:
             entry = self._store.pop(key, None)
             if entry is not None:
                 self._bytes -= entry.size
+            elif self._spilled.pop(key, None) is not None:
+                self._remove_spill_file(key)
+
+    # -- spill tier ---------------------------------------------------------
+
+    def _spill_path(self, key: str) -> str:
+        return os.path.join(self.spill_dir, key + ".pkl")
+
+    def _remove_spill_file(self, key: str) -> None:
+        try:
+            os.remove(self._spill_path(key))
+        except OSError:
+            pass
+
+    def _fault_in_locked(self, key: str) -> _Entry:
+        """Reload a spilled entry into the memory tier (byte-identical);
+        raises KeyError if the key was never stored.
+
+        Spill I/O (here and in ``_evict_locked``) runs under the store
+        lock: correct and simple, at the cost of serializing concurrent
+        ops behind ~ms disk reads when the working set thrashes the
+        capacity bound.  Staging the file I/O outside the lock (per-key
+        in-flight markers) is the known next step if a shard's profile
+        ever shows lock contention here (see ROADMAP)."""
+        size, refs = self._spilled.pop(key)  # KeyError -> genuinely missing
+        with open(self._spill_path(key), "rb") as f:
+            value = pickle.loads(f.read())
+        self._remove_spill_file(key)
+        entry = _Entry(value, size, refs)
+        self._store[key] = entry
+        self._bytes += size
+        self.stats["spill_hits"] += 1
+        self._evict_locked(protect=key)     # may spill something else
+        return entry
 
     def _evict_locked(self, protect: Optional[str] = None) -> None:
         if self.capacity_bytes is None:
@@ -127,19 +200,30 @@ class ValueServer:
             entry = self._store.pop(victim)
             self._bytes -= entry.size
             self.stats["evictions"] += 1
+            if self.spill_dir is not None:
+                with open(self._spill_path(victim), "wb") as f:
+                    f.write(pickle.dumps(entry.value,
+                                         protocol=pickle.HIGHEST_PROTOCOL))
+                self._spilled[victim] = [entry.size, 0]
+                self.stats["spills"] += 1
 
     @property
     def total_bytes(self) -> int:
         with self._lock:
             return self._bytes
 
+    @property
+    def spilled_bytes(self) -> int:
+        with self._lock:
+            return sum(size for size, _ in self._spilled.values())
+
     def __len__(self) -> int:
         with self._lock:
-            return len(self._store)
+            return len(self._store) + len(self._spilled)
 
     def __contains__(self, key: str) -> bool:
         with self._lock:
-            return key in self._store
+            return key in self._store or key in self._spilled
 
     def prefetch(self, key: str) -> Future:
         return self._resolver.submit(self.get, key)

@@ -197,12 +197,30 @@ def attend(q, k, v, *, cfg: ModelConfig, causal=True, window=None,
 # ---------------------------------------------------------------------------
 
 
+def _project_kv(params, x, cfg: ModelConfig):
+    """Fused K/V input matmul: one gather of x feeds both projections.
+    Fused along a new leading axis (wk/wv have identical shapes), NOT
+    concatenated along heads: the kv-head axis of both halves stays
+    aligned with its "kv" shards, so the k/v split is always shard-local.
+    Fusing Q in as well would require a concat across the *differing* head
+    counts (H vs KVH under GQA) -- the concat+split-across-a-sharded-dim
+    pattern that miscompiled fuse_ffn under GSPMD -- so Q stays separate.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.fuse_kv:
+        wkv = jnp.stack([params["wk"], params["wv"]]).astype(cd)
+        kv = jnp.einsum("bsd,gdhk->gbshk", x, wkv)
+        return kv[0], kv[1]
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cd))
+    return k, v
+
+
 def project_qkv(params, x, cfg: ModelConfig, cos=None, sin=None):
     """x (B,S,D) -> q (B,S,H,hd), k/v (B,S,KVH,hd); applies qk-norm + rope."""
     cd = jnp.dtype(cfg.compute_dtype)
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cd))
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cd))
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cd))
+    k, v = _project_kv(params, x, cfg)
     q = axisenv.constrain(q, "batch", None, "model", None)
     k = axisenv.constrain(k, "batch", None, "kv", None)
     v = axisenv.constrain(v, "batch", None, "kv", None)
@@ -259,9 +277,7 @@ def cross_attention(params, x, enc_kv, cfg: ModelConfig):
 
 
 def encode_cross_kv(params, enc_out, cfg: ModelConfig):
-    cd = jnp.dtype(cfg.compute_dtype)
-    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(cd))
-    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(cd))
+    k, v = _project_kv(params, enc_out, cfg)
     return {"k": k, "v": v}
 
 

@@ -124,21 +124,29 @@ def moe_dropping(params, x, cfg: ModelConfig):
     slots = jnp.full((B, E, C), S, jnp.int32)
     slots = slots.at[b_idx, e_flat, p_flat].set(tok_flat, mode="drop")
 
-    # batched gather into expert slots (padded row S reads zeros)
-    xp = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    # batched gather into expert slots: empty slots hold the OOB index S and
+    # read zeros via fill-mode.  (The old pad-row concat grew the token
+    # axis, which is sharded over "model" under seq-parallelism -- the same
+    # concat+split-across-a-sharded-dim pattern that miscompiled fuse_ffn
+    # under GSPMD; a fill-mode gather never changes the sharded shape.)
     xe = jnp.take_along_axis(
-        xp, slots.reshape(B, E * C)[..., None], axis=1
+        x, slots.reshape(B, E * C)[..., None], axis=1,
+        mode="fill", fill_value=0,
     ).reshape(B, E, C, D).astype(cd)
     xe = axisenv.constrain(xe, "batch", "model", None, None)  # EP a2a here
     ye = _expert_ffn_batched(params, xe, cfg)                 # (B,E,C,D)
     ye = axisenv.constrain(ye, "batch", "model", None, None)
 
-    # combine: gather each kept assignment's slot back (a2a back here)
+    # combine: gather each kept assignment's slot back (a2a back here).
+    # Dropped assignments point at the OOB index E*C and read zeros via
+    # fill-mode -- the E*C axis merges the "model"-sharded expert dim, so
+    # appending a pad row here was the second instance of the sharded-dim
+    # concat pattern.
     yk = ye.reshape(B, E * C, D)
-    yk = jnp.concatenate([yk, jnp.zeros((B, 1, D), yk.dtype)], axis=1)
     flat_idx = jnp.where(keep.reshape(B, S * K),
                          e_flat * C + p_flat, E * C)          # OOB = dropped
-    y_sel = jnp.take_along_axis(yk, flat_idx[..., None], axis=1)
+    y_sel = jnp.take_along_axis(yk, flat_idx[..., None], axis=1,
+                                mode="fill", fill_value=0)
     w = (topw.reshape(B, S * K, 1)
          * keep.reshape(B, S * K, 1)).astype(y_sel.dtype)
     y = jnp.sum((y_sel * w).reshape(B, S, K, D), axis=2)

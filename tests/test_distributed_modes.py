@@ -36,6 +36,19 @@ with mesh:
 assert float(jnp.max(jnp.abs(y_ep - y_ref))) < 1e-4
 print('EP_OK')
 
+# 1b. fill-gather MoE dispatch under GSPMD with the seq-parallel layout
+# (token axis sharded over "model") matches the unsharded reference --
+# regression net for the concat-across-a-sharded-dim miscompile class
+def g(p_, x_):
+    with axisenv.activation_axes(batch=('data',), batch_sizes=(2,),
+                                 model='model', model_size=4, mesh=mesh):
+        return moe.moe_dropping(p_, x_, cfg)
+with mesh:
+    y_sp, _ = jax.jit(g, in_shardings=(
+        None, NamedSharding(mesh, P('data', 'model', None))))(p, x)
+assert float(jnp.max(jnp.abs(y_sp - y_ref))) < 1e-4
+print('SP_MOE_OK')
+
 # 2. a real sharded train step runs and matches the single-device step
 cfg2 = get_config('internlm2-1.8b', reduced=True).replace(remat='none')
 tc = TrainConfig(lr=1e-3, warmup_steps=0, total_steps=10)
@@ -64,6 +77,7 @@ def test_multidevice_modes():
     out = subprocess.run([sys.executable, "-c", SCRIPT], cwd=".",
                          capture_output=True, text=True, timeout=900)
     assert "EP_OK" in out.stdout, out.stdout + out.stderr
+    assert "SP_MOE_OK" in out.stdout, out.stdout + out.stderr
     assert "MODES_OK" in out.stdout, out.stdout + out.stderr
     # every mode computes the same loss (sharding never changes semantics)
     losses = [float(line.split("=")[1]) for line in out.stdout.splitlines()

@@ -1,5 +1,9 @@
 """Event-driven dispatch fabric: single-serialization, latency floor,
-bounded straggler dedup, and value-server refcount/eviction behaviour."""
+bounded straggler dedup, and value-server refcount/eviction behaviour.
+
+The serialization / latency / straggler suites run over both transport
+backends: ``local`` (in-process Condition deques) and ``proc`` (socket
+frames through a broker process) -- the fabric contract is identical."""
 import threading
 import time
 
@@ -14,11 +18,27 @@ from repro.core.value_server import Proxy
 from repro.utils.timing import now
 
 
+@pytest.fixture(params=["local", "proc"])
+def make_queues(request):
+    """Factory of ColmenaQueues on each backend; tears down broker procs."""
+    created = []
+
+    def factory(topics, **kw):
+        q = ColmenaQueues(topics, backend=request.param, **kw)
+        created.append(q)
+        return q
+
+    factory.backend = request.param
+    yield factory
+    for q in created:
+        q.shutdown()
+
+
 # ---------------------------------------------------------------------------
 # serialization: exactly one pickle per message per queue hop
 # ---------------------------------------------------------------------------
 
-def test_single_serialization_per_message(monkeypatch):
+def test_single_serialization_per_message(monkeypatch, make_queues):
     calls = {"n": 0}
     real = msg_mod.serialize
 
@@ -27,7 +47,7 @@ def test_single_serialization_per_message(monkeypatch):
         return real(obj)
 
     monkeypatch.setattr(msg_mod, "serialize", counting)
-    queues = ColmenaQueues(["t"])
+    queues = make_queues(["t"])
     server = TaskServer(queues, workers_per_topic=1)
     server.register(lambda x: x + 1, name="t")
     with server:
@@ -60,10 +80,12 @@ def test_sizes_and_timers_survive_single_hop():
 # latency: no polling floor on the dispatch / result path
 # ---------------------------------------------------------------------------
 
-def test_zero_length_task_latency_below_polling_floor():
+def test_zero_length_task_latency_below_polling_floor(make_queues):
     """A zero-length task must round-trip well under the old 50 ms poll
-    interval (an event-driven fabric does this in ~a millisecond)."""
-    queues = ColmenaQueues(["t"])
+    interval (an event-driven fabric does this in ~a millisecond; socket
+    frames through the broker add ~a millisecond more, still far below
+    any polling floor)."""
+    queues = make_queues(["t"])
     server = TaskServer(queues, workers_per_topic=1)
     server.register(lambda: None, name="t")
     lat = []
@@ -78,8 +100,8 @@ def test_zero_length_task_latency_below_polling_floor():
     assert median < 0.025, f"median round-trip {median*1e3:.2f} ms"
 
 
-def test_get_tasks_batched_drain():
-    queues = ColmenaQueues(["t"])
+def test_get_tasks_batched_drain(make_queues):
+    queues = make_queues(["t"])
     for i in range(5):
         queues.send_task(i, method="t", topic="t")
     batch = queues.get_tasks("t", max_n=3, timeout=1)
@@ -123,10 +145,10 @@ def test_bounded_id_set_caps_memory():
     assert 0 not in s and 5 not in s
 
 
-def test_done_ids_only_track_raced_tasks():
+def test_done_ids_only_track_raced_tasks(make_queues):
     """Without straggler races the dedup window stays empty -- ordinary
     campaigns never accumulate completed-task ids."""
-    queues = ColmenaQueues(["t"])
+    queues = make_queues(["t"])
     server = TaskServer(queues, workers_per_topic=2)
     server.register(lambda x: x, name="t")
     with server:
@@ -138,7 +160,7 @@ def test_done_ids_only_track_raced_tasks():
         assert len(server._raced_ids) == 0
 
 
-def test_straggler_race_delivers_exactly_one_result():
+def test_straggler_race_delivers_exactly_one_result(make_queues):
     attempt = {"n": 0}
     lock = threading.Lock()
 
@@ -149,7 +171,7 @@ def test_straggler_race_delivers_exactly_one_result():
         time.sleep(0.02 if is_backup else delay)
         return delay
 
-    queues = ColmenaQueues(["s"])
+    queues = make_queues(["s"])
     server = TaskServer(queues, workers_per_topic=4,
                         straggler_factor=4.0, straggler_min_history=5)
     server.register(sim, name="s")
