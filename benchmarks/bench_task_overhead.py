@@ -53,7 +53,40 @@ def run(T: int = 200, I: int = 1 << 20, N: int = 8, D: float = 0.005):
         rows.append((f"fig5_{tag}_total_overhead[proc]",
                      res["total_overhead_median"] * 1e6,
                      f"n={res['n_results']}"))
+    rows.extend(run_checkpoint_bench())
     return rows
+
+
+def run_checkpoint_bench(n_envs: int = 500, env_bytes: int = 2048):
+    """Cost of the exactly-once machinery's checkpoint path: snapshot +
+    restore of a broker holding ``n_envs`` queued envelopes (the price a
+    campaign pays per ``--checkpoint-every`` interval)."""
+    import time
+
+    from repro.core.transport import Envelope, make_transport
+    from repro.utils.timing import now as tnow
+
+    t = make_transport("proc")
+    try:
+        ch = t.channel("bench", "requests")
+        payload = b"\0" * env_bytes
+        for i in range(n_envs):
+            ch.put(Envelope(tnow(), payload, {"task_id": str(i)}))
+        t0 = time.perf_counter()
+        snap = t.snapshot()
+        t_snap = time.perf_counter() - t0
+        t2 = make_transport("proc")
+        try:
+            t0 = time.perf_counter()
+            t2.restore(snap)
+            t_restore = time.perf_counter() - t0
+        finally:
+            t2.close()
+    finally:
+        t.close()
+    note = f"{n_envs}x{env_bytes}B queued, {len(snap)}B snapshot"
+    return [("ckpt_snapshot_ms", t_snap * 1e3, note),
+            ("ckpt_restore_ms", t_restore * 1e3, note)]
 
 
 if __name__ == "__main__":

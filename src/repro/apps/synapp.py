@@ -4,9 +4,24 @@ unique (non-cacheable) input of size I bytes and output of size O bytes.
 The Thinker submits one task per worker, then one new task per completed
 result, until T tasks are done -- measuring the full task lifecycle for
 each {T, D, I, O, N} configuration (Figs. 5, 6, 9).
+
+SynApp doubles as the checkpoint/resume demo: with
+``checkpoint_every=K`` the Thinker writes a fabric checkpoint (queued +
+in-flight envelopes, claim window, Thinker progress, the full config)
+every K results, and ``run_synapp(cfg, resume_from=path)`` continues a
+``kill -9``'d run from the last checkpoint without resubmitting
+completed work (checkpointing requires ``--no-value-server``: VS shard
+contents die with the incarnation and are outside the fabric
+checkpoint's scope)::
+
+    PYTHONPATH=src python -m repro.apps.synapp --backend proc -T 200 \
+        -D 0.05 --no-value-server --checkpoint-every 25 --ckpt /tmp/syn.ckpt
+    # kill -9 it mid-run, then:
+    PYTHONPATH=src python -m repro.apps.synapp --resume /tmp/syn.ckpt
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 
@@ -32,39 +47,89 @@ class SynConfig:
                                  # processes + sharded socket Value Server
                                  # (the paper's multi-process topology)
     vs_shards: int = 2           # Value Server shards on the proc backend
+    checkpoint_every: int = 0    # write a checkpoint every K results (0: off)
+    checkpoint_path: str = ""    # where checkpoints go (required if K > 0)
+    lease_timeout: float = 10.0  # unacked-delivery expiry; bounds how long a
+                                 # resumed run waits to re-run in-flight work
 
 
 class SynThinker(BaseThinker):
-    def __init__(self, queues, cfg: SynConfig):
+    def __init__(self, queues, cfg: SynConfig, *, submitted: int = 0,
+                 completed: int = 0):
+        """submitted/completed seed the progress counters when resuming
+        from a checkpoint: already-completed work is never resubmitted,
+        and the restored in-flight tasks drive the submit-per-completion
+        loop forward."""
         super().__init__(queues)
         self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
         self.results = []
-        self.submitted = 0
+        self.submitted = submitted
+        self.completed = completed
+        # serializes submissions against checkpoints: a snapshot taken
+        # between a submission being counted and its envelope landing
+        # would record a task the restored queues don't contain
+        self._sub_lock = threading.Lock()
+        self._ckpt_due = False
 
-    def _payload(self):
-        # unique (non-cacheable) input
-        return self.rng.integers(0, 255, size=self.cfg.I,
-                                 dtype=np.uint8).tobytes()
+    def _payload(self, idx: int):
+        # unique (non-cacheable) input, keyed by submission index so a
+        # resumed run continues the stream instead of replaying payloads
+        # the original incarnation already sent
+        rng = np.random.default_rng((self.cfg.seed, idx))
+        return rng.integers(0, 255, size=self.cfg.I,
+                            dtype=np.uint8).tobytes()
 
-    def _submit(self):
-        self.queues.send_task(self._payload(), self.cfg.D, self.cfg.O,
-                              method="syntask", topic="syntask")
-        self.submitted += 1
+    def _submit(self) -> bool:
+        with self._sub_lock:
+            if self.submitted >= self.cfg.T:
+                return False
+            idx = self.submitted
+            self.submitted += 1
+            # send inside the lock: count and envelope move together
+            # relative to any concurrent checkpoint
+            self.queues.send_task(self._payload(idx), self.cfg.D,
+                                  self.cfg.O, method="syntask",
+                                  topic="syntask")
+        return True
+
+    def _checkpoint(self):
+        with self._sub_lock:
+            self.queues.checkpoint(
+                self.cfg.checkpoint_path,
+                extra={"submitted": self.submitted,
+                       "completed": self.completed,
+                       "T": self.cfg.T, "cfg": dict(self.cfg.__dict__)})
 
     @agent
     def planner(self):
-        for _ in range(min(self.cfg.N, self.cfg.T)):
-            self._submit()
+        # top up to N in flight (on a fresh run: submit N; on resume the
+        # restored in-flight tasks already count toward the window)
+        while (self.submitted - self.completed < self.cfg.N
+               and self._submit()):
+            pass
+        if self.completed >= self.cfg.T:    # resumed post-completion
+            self.done.set()
 
     @result_processor(topic="syntask")
     def consumer(self, result):
         assert result.success, result.error
         self.results.append(result)
-        if len(self.results) >= self.cfg.T:
+        self.completed += 1
+        if (self.cfg.checkpoint_every
+                and self.completed % self.cfg.checkpoint_every == 0):
+            # defer to the batch boundary: mid-batch, sibling results of
+            # this drain are decoded (acked out of the broker) but not
+            # yet counted -- a snapshot here would lose them on resume
+            self._ckpt_due = True
+        if self.completed >= self.cfg.T:
             self.done.set()
-        elif self.submitted < self.cfg.T:
+        else:
             self._submit()
+
+    def after_result_batch(self, topic):
+        if self._ckpt_due:
+            self._ckpt_due = False
+            self._checkpoint()
 
 
 def syntask(payload: bytes, duration: float, out_bytes: int) -> bytes:
@@ -73,8 +138,32 @@ def syntask(payload: bytes, duration: float, out_bytes: int) -> bytes:
     return b"\0" * out_bytes
 
 
-def run_synapp(cfg: SynConfig):
-    """Returns per-component median lifecycle times + utilization."""
+def run_synapp(cfg: SynConfig, resume_from: str = ""):
+    """Returns per-component median lifecycle times + utilization.
+    ``resume_from``: continue from a checkpoint file instead of starting
+    fresh (the fabric state is restored *before* workers start)."""
+    ckpt_payload = None
+    if resume_from:
+        # the campaign's config travels with the checkpoint: a resume
+        # continues *that* run (same durations, sizes, backend, paths),
+        # so peek at it before building the fabric it configures (one
+        # read -- the payload is handed to resume() below)
+        ckpt_payload = ColmenaQueues.load_checkpoint(resume_from)
+        for k, v in (ckpt_payload["extra"] or {}).get("cfg", {}).items():
+            setattr(cfg, k, v)
+    if cfg.checkpoint_every and not cfg.checkpoint_path:
+        raise ValueError("checkpoint_every is set but checkpoint_path is "
+                         "empty -- the first checkpoint would fail inside "
+                         "the consumer thread and hang the run")
+    if (cfg.checkpoint_every or resume_from) and cfg.use_value_server:
+        # proxied payloads reference Value Server shards that die with the
+        # incarnation; VS state is outside the queue checkpoint's scope
+        # (durable / replicated shards are a roadmap item), so a resumed
+        # run could never resolve them -- fail fast instead of hanging
+        raise ValueError("checkpointing requires use_value_server=False: "
+                         "Value Server contents are not captured by the "
+                         "fabric checkpoint, so restored task proxies "
+                         "would dangle")
     proc = cfg.backend == "proc"
     if not cfg.use_value_server:
         vs = None
@@ -85,13 +174,18 @@ def run_synapp(cfg: SynConfig):
     queues = ColmenaQueues(
         ["syntask"], backend=cfg.backend, value_server=vs,
         proxy_threshold=cfg.proxy_threshold if cfg.use_value_server
-        else None)
+        else None, lease_timeout=cfg.lease_timeout)
+    progress = {"submitted": 0, "completed": 0}
+    if resume_from:
+        progress = queues.resume(resume_from, payload=ckpt_payload)
+        cfg.T = progress.get("T", cfg.T)    # totals travel with the ckpt
     if proc:
         server = ProcessPoolTaskServer(queues, workers_per_topic=cfg.N)
     else:
         server = TaskServer(queues, workers_per_topic=cfg.N)
     server.register(syntask, topic="syntask")
-    thinker = SynThinker(queues, cfg)
+    thinker = SynThinker(queues, cfg, submitted=progress["submitted"],
+                         completed=progress["completed"])
     t0 = time.perf_counter()
     try:
         with server:
@@ -120,4 +214,39 @@ def run_synapp(cfg: SynConfig):
         "per_task_wall": makespan / n if n else float("inf"),
         "utilization": busy / (cfg.N * makespan) if makespan else 0.0,
         "n_results": n,
+        "completed_total": thinker.completed,
     }
+
+
+def main(argv=None):
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("-T", type=int, default=200, help="total tasks")
+    p.add_argument("-D", type=float, default=0.0, help="task duration (s)")
+    p.add_argument("-I", type=int, default=1 << 20, help="input bytes")
+    p.add_argument("-N", type=int, default=8, help="workers")
+    p.add_argument("--backend", choices=("local", "proc"), default="local")
+    p.add_argument("--no-value-server", action="store_true")
+    p.add_argument("--checkpoint-every", type=int, default=0, metavar="K",
+                   help="checkpoint the fabric every K results")
+    p.add_argument("--ckpt", default="synapp.ckpt",
+                   help="checkpoint file path")
+    p.add_argument("--resume", default="",
+                   help="resume from this checkpoint file")
+    args = p.parse_args(argv)
+    cfg = SynConfig(T=args.T, D=args.D, I=args.I, N=args.N,
+                    backend=args.backend,
+                    use_value_server=not args.no_value_server,
+                    checkpoint_every=args.checkpoint_every,
+                    checkpoint_path=args.ckpt)
+    res = run_synapp(cfg, resume_from=args.resume)
+    print(f"completed {res['completed_total']}/{cfg.T} "
+          f"({res['n_results']} this run)  "
+          f"makespan {res['makespan']:.2f}s  "
+          f"per-task wall {res['per_task_wall']*1e3:.2f}ms  "
+          f"median overhead {res['total_overhead_median']*1e3:.2f}ms")
+    return res
+
+
+if __name__ == "__main__":
+    main()

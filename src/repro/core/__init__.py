@@ -5,7 +5,9 @@ straggler mitigation) <-> Workers, with per-topic queues, a Value Server
 for large-object transfer, pooled resource tracking, and the abstract
 campaign formulation of §II-A.
 """
-from repro.core.campaign import AssaySpec, CampaignRecord, Observation  # noqa: F401
+from repro.core.campaign import (AssaySpec, CampaignRecord,  # noqa: F401
+                                 Observation, checkpoint_campaign,
+                                 resume_campaign)
 from repro.core.message import Result, Task  # noqa: F401
 from repro.core.process_pool import ProcessPoolTaskServer  # noqa: F401
 from repro.core.queues import ColmenaQueues  # noqa: F401

@@ -84,9 +84,28 @@ class CampaignRecord:
 
     # -- checkpoint/restart ----------------------------------------------------
 
-    def save(self, path: str) -> None:
+    def state(self) -> List[dict]:
+        """Picklable/JSONable image of the record (for embedding in a
+        campaign checkpoint alongside the queue snapshot)."""
         with self._lock:
-            data = [asdict(o) for o in self._obs]
+            return [asdict(o) for o in self._obs]
+
+    def load_state(self, data: List[dict]) -> int:
+        """Atomically replace the record with ``data``.  Both structures
+        are rebuilt off-lock and swapped under one lock hold, so a
+        concurrent ``add`` observes either the old record or the fully
+        restored one -- never a half-restored interleaving."""
+        obs = [Observation(**d) for d in data]
+        by_entity: Dict[str, Dict[str, float]] = {}
+        for o in obs:
+            by_entity.setdefault(o.entity, {})[o.prop] = o.value
+        with self._lock:
+            self._obs = obs
+            self._by_entity = by_entity
+        return len(obs)
+
+    def save(self, path: str) -> None:
+        data = self.state()
         tmp = path + ".tmp"
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         with open(tmp, "w") as f:
@@ -96,9 +115,32 @@ class CampaignRecord:
     def restore(self, path: str) -> int:
         with open(path) as f:
             data = json.load(f)
-        with self._lock:
-            self._obs = []
-            self._by_entity = {}
-        for d in data:
-            self.add(Observation(**d))
-        return len(data)
+        return self.load_state(data)
+
+
+# -- campaign-level checkpointing ------------------------------------------
+#
+# A campaign's durable state is two things: the record D (what has been
+# observed) and the queue fabric (what is still in flight).  Checkpointing
+# them together through ``ColmenaQueues.checkpoint`` gives a single file a
+# ``kill -9``'d campaign resumes from without resubmitting completed work:
+# queued tasks re-dispatch, leased (in-flight) tasks expire and redeliver,
+# completed-but-unconsumed results deliver from the restored result
+# queues, and the restored claim window swallows re-executions of work
+# that already published a result.
+
+
+def checkpoint_campaign(path: str, queues, record: CampaignRecord,
+                        extra=None) -> str:
+    """Write record + queue state to ``path`` (atomic tmp+rename via
+    ``ColmenaQueues.checkpoint``)."""
+    payload = {"record": record.state(), "extra": extra}
+    return queues.checkpoint(path, extra=payload)
+
+
+def resume_campaign(path: str, queues, record: CampaignRecord):
+    """Restore ``path`` into a fresh fabric + record; returns the caller's
+    ``extra``.  Call before task servers / Thinker agents start."""
+    payload = queues.resume(path)
+    record.load_state(payload["record"])
+    return payload["extra"]

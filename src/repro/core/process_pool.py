@@ -29,9 +29,17 @@ arbitrate via the broker's atomic ``claim`` op, so exactly one result per
 task id reaches the Thinker even though the racers live in different
 processes.
 
-Fault tolerance mirrors the thread server: per-task retry with capped
+Fault tolerance mirrors the thread server -- per-task retry with capped
 attempts, errors captured into the Result, one-shot Value-Server inputs
-released by the winning worker only.
+released by the winning worker only -- and adds **exactly-once dispatch**
+on top of the transport's leases: a worker holds its dispatch-channel
+lease for the task's whole execution and only acks after the result is
+published, so a worker SIGKILLed mid-task (or a response frame lost with
+its connection) leaves an unacked lease that expires and redelivers the
+task to a *different* worker.  Completions arbitrate via the claim fused
+into the result ``put``, so a redelivery racing a slow-but-alive
+original -- like a straggler backup racing its original -- yields exactly
+one result per task id.
 
 Workers are **forked** (not spawned): registered methods may be closures
 or lambdas, which only fork can inherit.  CPython >= 3.12 warns about
@@ -56,6 +64,7 @@ from repro.core import message as msg
 from repro.core.queues import ColmenaQueues
 from repro.core.task_server import MethodSpec
 from repro.core.transport import Envelope
+from repro.core.transport.base import BoundedDict
 from repro.core.value_server import ValueServer, resolve_tree
 from repro.utils.timing import now
 
@@ -65,7 +74,8 @@ _MAX_BOUNCES = 16       # prefer progress over placement after this many
 class ProcessPoolTaskServer:
     def __init__(self, queues: ColmenaQueues, *, workers_per_topic: int = 2,
                  straggler_factor: Optional[float] = None,
-                 straggler_min_history: int = 5, intake_batch: int = 32):
+                 straggler_min_history: int = 5, intake_batch: int = 32,
+                 history_window: int = 4096):
         if queues.backend != "proc":
             raise ValueError(
                 "ProcessPoolTaskServer requires ColmenaQueues(backend='proc')"
@@ -87,8 +97,10 @@ class ProcessPoolTaskServer:
         self._straggler_cond = threading.Condition(self._lock)
         self._inflight: Dict[str, dict] = {}   # task_id -> info
         self._runtimes: Dict[str, list] = {}   # topic -> recent runtimes
-        # task_id -> [identities that *started* it], for tests/diagnostics
-        self.task_history: Dict[str, list] = {}
+        # task_id -> [identities that *started* it], for tests/diagnostics;
+        # sliding-window bounded (BoundedIdSet's eviction pattern) so the
+        # map cannot grow without limit over a long campaign
+        self.task_history = BoundedDict(history_window)
 
     # -- registration ---------------------------------------------------------
 
@@ -137,10 +149,13 @@ class ProcessPoolTaskServer:
 
     def stop(self):
         self._stop.set()
-        for topic in self.queues.topics():
-            ch = self._dispatch_channel(topic)
-            for _ in range(self._workers_per_topic):
-                ch.put(Envelope(now(), b"", {"stop": True}))
+        try:
+            for topic in self.queues.topics():
+                ch = self._dispatch_channel(topic)
+                for _ in range(self._workers_per_topic):
+                    ch.put(Envelope(now(), b"", {"stop": True}))
+        except (ConnectionError, OSError):
+            pass    # broker already dead: workers die with their sockets
         self.queues.wake_all()
         with self._lock:
             self._straggler_cond.notify_all()
@@ -163,7 +178,11 @@ class ProcessPoolTaskServer:
         requests = self.queues._topics[topic].requests
         dispatch = self._dispatch_channel(topic)
         while not self._stop.is_set():
-            envs = requests.get_batch(self.intake_batch, cancel=self._stop)
+            try:
+                envs = requests.get_batch(self.intake_batch,
+                                          cancel=self._stop)
+            except (ConnectionError, OSError):
+                return                      # broker died: fabric is gone
             if not envs:
                 continue                    # woken for shutdown; loop checks
             with self._lock:
@@ -176,11 +195,23 @@ class ProcessPoolTaskServer:
                 self._straggler_cond.notify_all()
             for env in envs:
                 dispatch.put(env)           # bytes relayed verbatim
+            # every envelope is now on the pool dispatch queue (itself
+            # leased until a worker completes it): commit the intake lease
+            requests.ack()
 
     def _monitor_loop(self):
         control = self._control_channel()
         while not self._stop.is_set():
-            envs = control.get_batch(self.intake_batch, cancel=self._stop)
+            try:
+                envs = control.get_batch(self.intake_batch,
+                                         cancel=self._stop)
+            except (ConnectionError, OSError):
+                return                      # broker died: fabric is gone
+            if envs:
+                # control events are cheap to lose on a crash (the parent
+                # dies with its whole bookkeeping): ack up front so a slow
+                # scan can never let the lease lapse into redelivery
+                control.ack()
             with self._lock:
                 for env in envs:
                     kind, tid, identity, topic, value = pickle.loads(env.data)
@@ -228,7 +259,10 @@ class ProcessPoolTaskServer:
                     if next_deadline is None:
                         self._straggler_cond.wait()
                     else:
-                        self._straggler_cond.wait(max(next_deadline - tnow,
+                        # recompute now(): tnow predates the O(inflight)
+                        # scan above, and waiting next_deadline - tnow
+                        # would overshoot a deadline earned during it
+                        self._straggler_cond.wait(max(next_deadline - now(),
                                                       0.0))
                     continue
             for tid, info in fire:
@@ -257,6 +291,7 @@ class ProcessPoolTaskServer:
                 continue
             env = envs[0]
             if env.meta.get("stop"):
+                dispatch.ack(flush=True)    # don't strand the stop envelope
                 os._exit(0)
             task = queues._decode_task(env)
             if (task.exclude_worker == identity
@@ -267,12 +302,21 @@ class ProcessPoolTaskServer:
                 dispatch.put(Envelope(now(), data,
                                       {"input_size": task.input_size,
                                        "task_id": task.task_id}))
+                dispatch.ack()              # handed off: the re-put owns it
                 time.sleep(0.002 * task.bounces)
                 continue
             control.put(Envelope(now(), pickle.dumps(
                 ("started", task.task_id, identity, task.topic, now())),
                 {}))
             self._execute(task, identity, dispatch, control, cache)
+            # the task reached a terminal handoff (result published, retry
+            # requeued, or duplicate swallowed by the claim): release the
+            # dispatch lease.  The ack piggybacks on the next frame this
+            # worker sends; dying before it reaches the broker only causes
+            # a redelivery whose completion the claim dedups.  Until here
+            # the lease stays held, so a SIGKILL mid-execution expires it
+            # and the broker redelivers the task to another worker.
+            dispatch.ack()
 
     def _execute(self, task: msg.Task, identity: str, dispatch, control,
                  cache: dict):
@@ -316,12 +360,13 @@ class ProcessPoolTaskServer:
                 args=task.args, kwargs=task.kwargs, timer=task.timer,
                 input_size=task.input_size, worker=identity)
 
-        won = True
-        if self.straggler_factor:
-            # cross-process first-completion-wins: the broker arbitrates
-            won = queues.transport.claim(task.task_id)
+        # cross-process first-completion-wins, fused with the publish: the
+        # broker claims the id and enqueues the result in one atomic op.
+        # Always on (not just under straggler_factor): a lease-expiry
+        # redelivery racing a slow-but-alive original is the same race as
+        # a straggler backup and needs the same arbitration.
+        won = queues.send_result(result, claim_id=task.task_id)
         if won:
-            queues.send_result(result)
             queues.release_task_inputs(task)
         control.put(Envelope(now(), pickle.dumps(
             ("done", task.task_id, identity, task.topic, runtime)), {}))

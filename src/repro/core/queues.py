@@ -26,9 +26,19 @@ receiver grafts them onto the deserialized message's Timer.
 A configurable proxy threshold transparently moves large values through the
 Value Server instead (lazy object proxies); those one-shot entries are
 refcounted and released once their single consumer resolves them.
+
+Delivery is leased on both backends (``transport.base.Channel``): the
+queue-level ``get_*`` helpers ack as soon as a batch is decoded and
+handed to the caller, while raw-channel consumers (pool workers) hold
+their lease across execution -- either way an unacked batch redelivers
+after ``lease_timeout``, and ``checkpoint(path)``/``resume(path)``
+persist the whole fabric (queued + in-flight envelopes, claim window,
+active count) so a killed campaign restarts without resubmission.
 """
 from __future__ import annotations
 
+import os
+import pickle
 import threading
 from typing import Iterable, List, Optional
 
@@ -52,15 +62,24 @@ class ColmenaQueues:
                  transport: Optional[Transport] = None,
                  value_server=None,
                  proxy_threshold: Optional[int] = None,
-                 release_inputs: bool = True):
+                 release_inputs: bool = True,
+                 lease_timeout: Optional[float] = None):
         """backend: "local" (in-process deques) or "proc" (socket broker
         process); ignored when an explicit ``transport`` is given.
         release_inputs: delete one-shot proxied task inputs from the
         Value Server once the task completes (bounds campaign memory).
         Set False if your Thinker resolves ``result.args`` proxies after
-        completion, e.g. to resubmit the exact input payload."""
-        self.transport = transport if transport is not None \
-            else make_transport(backend)
+        completion, e.g. to resubmit the exact input payload.
+        lease_timeout: seconds before an unacked delivery lease expires
+        and its envelopes redeliver (None: the backend default).  Must
+        exceed the longest task execution; it also bounds how long a
+        resumed campaign waits before re-running work that was in flight
+        at the checkpoint."""
+        if transport is None:
+            kw = {} if lease_timeout is None \
+                else {"lease_timeout": lease_timeout}
+            transport = make_transport(backend, **kw)
+        self.transport = transport
         self.backend = self.transport.name
         self._topics = {t: TopicQueue(self.transport, t) for t in topics}
         self.value_server = value_server
@@ -84,6 +103,77 @@ class ColmenaQueues:
         local backend; idempotent."""
         self.wake_all()
         self.transport.close()
+
+    # -- checkpoint / resume ------------------------------------------------
+
+    def checkpoint(self, path: str, extra=None) -> str:
+        """Write a resumable image of the fabric to ``path``: the
+        transport snapshot (queued + in-flight envelopes, leases, claim
+        window) plus the active-task count, and any picklable ``extra``
+        the application wants to travel with it (Thinker progress, a
+        CampaignRecord).  Written atomically (tmp + rename) so a kill
+        mid-checkpoint leaves the previous checkpoint intact.
+
+        The transport snapshot is a consistent cut of the queues, but
+        the active count and the application's ``extra`` are read
+        separately: call from the (sole) result-consuming thread with no
+        concurrent ``send_task`` -- the blessed site is
+        ``BaseThinker.after_result_batch``, where every result of the
+        drained (already-acked) batch has been counted -- so the
+        progress written cannot drift from the captured queues.  A count
+        that includes a task the snapshot missed would make a resumed
+        ``wait_until_done`` wait forever.  Value Server contents are
+        NOT captured (shards die with the incarnation); checkpointed
+        campaigns should carry payloads inline."""
+        payload = {"version": 1,
+                   "transport": self.transport.snapshot(),
+                   "active": self.active_count,
+                   "extra": extra}
+        tmp = path + ".tmp"
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        with open(tmp, "wb") as f:
+            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)
+        return path
+
+    @staticmethod
+    def load_checkpoint(path: str) -> dict:
+        """Read + validate a checkpoint file without restoring it, e.g.
+        to inspect ``extra`` before constructing the fabric it
+        configures.  Pass the returned payload to ``resume`` to avoid a
+        second read of the (potentially large) snapshot blob."""
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+        if payload.get("version") != 1:
+            raise ValueError(
+                f"unsupported checkpoint version {payload.get('version')!r}")
+        return payload
+
+    def resume(self, path: str, payload: Optional[dict] = None):
+        """Restore a ``checkpoint`` into this (fresh) fabric and return
+        the ``extra`` that was stored with it.  Queued tasks re-dispatch,
+        in-flight leases expire and redeliver, completed-but-unconsumed
+        results deliver from the restored result queues, and the restored
+        claim window swallows re-executions of work that already
+        published -- so nothing is lost and nothing completes twice.
+        Call before task servers / Thinker agents start consuming.
+
+        The end-to-end guarantee needs every in-flight task to live in
+        transport state, which is true of ``ProcessPoolTaskServer`` on
+        the ``proc`` backend (workers hold their dispatch leases for the
+        whole execution).  The in-process thread ``TaskServer`` hands
+        tasks to its executor after acking them, so a checkpoint taken
+        while it runs captures only still-queued work -- quiesce it
+        first, or use the process pool for resumable campaigns."""
+        if payload is None:
+            payload = self.load_checkpoint(path)
+        # the checkpointed incarnation is dead: requeue its in-flight
+        # leases immediately instead of waiting out their durations
+        self.transport.restore(payload["transport"], expire_leases=True)
+        with self._lock:
+            self._active = payload["active"]
+        return payload["extra"]
 
     # -- Thinker side -------------------------------------------------------
 
@@ -141,7 +231,13 @@ class ColmenaQueues:
         env = self._topics[topic].results.get(timeout=timeout, cancel=cancel)
         if env is None:
             return None
-        return self._decode_result(env)
+        result = self._decode_result(env)
+        # decoded and about to be handed to the caller: commit the lease
+        # NOW (flush, not piggyback) -- a consumer that processes this
+        # result for longer than lease_timeout before sending its next
+        # frame must not get it redelivered
+        self._topics[topic].results.ack(flush=True)
+        return result
 
     def get_results(self, topic: str = "default", max_n: int = 32,
                     timeout: Optional[float] = None,
@@ -152,7 +248,11 @@ class ColmenaQueues:
         (empty list = cancelled/timed out)."""
         envs = self._topics[topic].results.get_batch(max_n, timeout=timeout,
                                                      cancel=cancel)
-        return [self._decode_result(e) for e in envs]
+        results = [self._decode_result(e) for e in envs]
+        if envs:
+            # flush: the batch may take arbitrarily long to process
+            self._topics[topic].results.ack(flush=True)
+        return results
 
     def wait_until_done(self, timeout: Optional[float] = None) -> bool:
         deadline = None if timeout is None else now() + timeout
@@ -194,7 +294,9 @@ class ColmenaQueues:
         env = self._topics[topic].requests.get(timeout=timeout, cancel=cancel)
         if env is None:
             return None
-        return self._decode_task(env)
+        task = self._decode_task(env)
+        self._topics[topic].requests.ack(flush=True)
+        return task
 
     def get_tasks(self, topic: str, max_n: int = 32,
                   timeout: Optional[float] = None,
@@ -204,9 +306,21 @@ class ColmenaQueues:
         queued tasks (empty list = cancelled/timed out)."""
         envs = self._topics[topic].requests.get_batch(max_n, timeout=timeout,
                                                       cancel=cancel)
-        return [self._decode_task(e) for e in envs]
+        tasks = [self._decode_task(e) for e in envs]
+        if envs:
+            # flush: execution of the drained batch may outlive the lease
+            self._topics[topic].requests.ack(flush=True)
+        return tasks
 
-    def send_result(self, result: msg.Result) -> None:
+    def send_result(self, result: msg.Result, *,
+                    claim_id: Optional[str] = None) -> bool:
+        """Publish a result.  ``claim_id`` (normally the task id) fuses
+        an atomic first-completion claim with the enqueue: only the first
+        publisher's result is enqueued (True); raced duplicates -- a
+        straggler backup, or a lease-expiry redelivery racing a slow but
+        alive original -- are swallowed in the same round trip (False).
+        The claim happening *inside* the put leaves no window where an
+        id is claimed but its result died with the claimant."""
         if self.value_server is not None and self.proxy_threshold is not None:
             result.value = proxy_tree(result.value, self.value_server,
                                       self.proxy_threshold, result.timer,
@@ -215,7 +329,8 @@ class ColmenaQueues:
         data = msg.timed_serialize(result, result.timer, "serialize_result")
         meta = {"serialize_result": result.timer.intervals["serialize_result"],
                 "output_size": len(data)}
-        self._topics[result.topic].results.put(Envelope(now(), data, meta))
+        return self._topics[result.topic].results.put(
+            Envelope(now(), data, meta), claim=claim_id)
 
     def requeue(self, task: msg.Task) -> None:
         """Retry path: put a (deserialized) task back on its request queue."""

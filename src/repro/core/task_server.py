@@ -243,11 +243,14 @@ class TaskServer:
                         next_deadline = deadline
                 if not fire:
                     # sleep until the earliest duplicate-dispatch deadline,
-                    # or until new work starts / history changes / stop
+                    # or until new work starts / history changes / stop.
+                    # now() is recomputed: tnow predates the O(inflight)
+                    # scan, and waiting next_deadline - tnow would
+                    # overshoot a deadline earned during it
                     if next_deadline is None:
                         self._straggler_cond.wait()
                     else:
-                        self._straggler_cond.wait(max(next_deadline - tnow,
+                        self._straggler_cond.wait(max(next_deadline - now(),
                                                       0.0))
                     continue
             for task in fire:

@@ -148,7 +148,24 @@ class BaseThinker:
                     except Exception as e:             # noqa: BLE001
                         self.log(f"processor {fn.__name__} crashed: {e!r}")
                         self.done.set()
+                if results and not self.done.is_set():
+                    try:
+                        self.after_result_batch(topic)
+                    except Exception as e:             # noqa: BLE001
+                        self.log(f"after_result_batch crashed: {e!r}")
+                        self.done.set()
         return run_processor
+
+    def after_result_batch(self, topic: str) -> None:
+        """Hook called after a drained result batch is fully processed.
+        This is the safe place to take a fabric checkpoint
+        (``queues.checkpoint``): every result of the batch -- whose
+        delivery lease was committed when the batch was decoded -- has
+        been counted by the processor, so the application progress
+        written into the checkpoint agrees with the captured queues.  A
+        checkpoint taken *mid*-batch would record decoded-but-unprocessed
+        results nowhere (acked out of the broker, absent from the
+        progress counters) and lose them across a resume."""
 
     def _wrap_responder(self, fn, event):
         def run_responder():

@@ -37,6 +37,20 @@ client simply blocks in ``recv`` with no polling loop on either side.
 Batched drains survive too: one ``get`` frame can return up to ``max_n``
 envelopes concatenated in a single response payload.
 
+Delivery is **leased** (exactly-once dispatch), on both backends: a
+``get`` moves its envelopes to an in-flight ledger under a lease id
+instead of destroying them, consumers ``ack`` once the batch is safely
+handed off (acks piggyback on the next outgoing frame, so the hot path
+stays one round-trip), and an unacked lease -- consumer SIGKILL, dropped
+response frame -- expires and requeues its envelopes for redelivery.
+Publishers that must be exactly-once fuse an atomic first-completion
+claim into the enqueue (``put(env, claim=task_id)``), so a redelivery
+racing a slow-but-alive original yields exactly one published result.
+``Transport.snapshot()/restore()`` serialize the whole fabric state
+(queued + leased envelopes, claim window, wake epochs) as one consistent
+cut -- the substrate of ``ColmenaQueues.checkpoint``/``resume`` and
+campaign-level restart without resubmission.
+
 The same frame protocol serves the sharded Value Server
 (``transport.shards``): each ``ValueServerShard`` is a process exposing
 put/get/ref ops over its own socket, and clients route keys to shards by

@@ -8,9 +8,33 @@ deque (``local``) or a broker process reached over a socket (``proc``).
 """
 from __future__ import annotations
 
+import pickle
 import threading
 from collections import deque
 from typing import List, NamedTuple, Optional
+
+SNAPSHOT_VERSION = 1
+
+
+def dump_snapshot(queues: list, claims_maxlen: int, claims_order: list,
+                  ) -> bytes:
+    """Shared snapshot wire format for both backends.  ``queues`` is a
+    list of ``(topic, kind, epoch, items, leases)`` with ``items`` a list
+    of ``(t_put, meta, data)`` and ``leases`` a list of ``(lease_id,
+    duration, items)``.  Callers pass queues sorted by (topic, kind) and
+    leases sorted by id so identical state always produces identical
+    bytes (no wall-clock values are stored)."""
+    state = {"version": SNAPSHOT_VERSION, "queues": queues,
+             "claims": {"maxlen": claims_maxlen, "order": claims_order}}
+    return pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def load_snapshot(data: bytes) -> dict:
+    state = pickle.loads(data)
+    if state.get("version") != SNAPSHOT_VERSION:
+        raise ValueError(
+            f"unsupported snapshot version {state.get('version')!r}")
+    return state
 
 
 class BoundedIdSet:
@@ -47,6 +71,51 @@ class BoundedIdSet:
         return len(self._order)
 
 
+class BoundedDict:
+    """Insertion-ordered dict with BoundedIdSet's sliding-window eviction
+    (oldest *keys* age out one at a time past ``maxlen``).  Used where a
+    per-task diagnostic map must not grow without bound over a long
+    campaign (e.g. the process pool's ``task_history``)."""
+
+    def __init__(self, maxlen: int):
+        self.maxlen = maxlen
+        self._order: deque = deque()
+        self._data: dict = {}
+
+    def _admit(self, key) -> None:
+        self._order.append(key)
+        while len(self._order) > self.maxlen:
+            self._data.pop(self._order.popleft(), None)
+
+    def __setitem__(self, key, value) -> None:
+        if key not in self._data:
+            self._admit(key)
+        self._data[key] = value
+
+    def setdefault(self, key, default):
+        if key not in self._data:
+            self[key] = default
+        return self._data[key]
+
+    def get(self, key, default=None):
+        return self._data.get(key, default)
+
+    def __getitem__(self, key):
+        return self._data[key]
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def keys(self):
+        return self._data.keys()
+
+    def items(self):
+        return self._data.items()
+
+
 class Envelope(NamedTuple):
     t_put: float            # enqueue time (queue-transit measurement)
     data: bytes             # the single pickle of the message
@@ -54,9 +123,31 @@ class Envelope(NamedTuple):
 
 
 class Channel:
-    """One direction of one topic (requests or results)."""
+    """One direction of one topic (requests or results).
 
-    def put(self, env: Envelope) -> None:
+    Delivery is **lease-based** (at-least-once): a ``get_batch`` does not
+    destroy the dequeued envelopes -- they move to an in-flight ledger
+    under a lease held by the receiving thread, and only an ``ack``
+    removes them for good.  A lease that is never acked (consumer death,
+    dropped response frame) expires after the transport's
+    ``lease_timeout`` and its envelopes are requeued for redelivery, so
+    no failure between dequeue and handoff can lose a task.  Consumers
+    ack *after* the work is safely handed off (result published, batch
+    relayed downstream); acks are piggybacked on the next frame so the
+    hot path stays one round-trip per batch.  Calling ``get_batch``
+    again on the same thread implicitly acks the previous still-held
+    lease (the poll-is-commit backstop), so naive drain loops keep their
+    pre-lease semantics.  Redelivery can race a slow-but-alive original
+    consumer; publishers that must be exactly-once dedup via
+    ``put(..., claim=task_id)``.
+    """
+
+    def put(self, env: Envelope, claim: Optional[str] = None) -> bool:
+        """Enqueue an envelope.  When ``claim`` is given, the enqueue is
+        fused with an atomic first-claim of that id: the envelope is only
+        enqueued (and True returned) for the first claimant -- losing
+        duplicates are swallowed in the same operation, leaving no window
+        where an id is claimed but its envelope was never published."""
         raise NotImplementedError
 
     def get(self, timeout: Optional[float] = None,
@@ -67,6 +158,14 @@ class Channel:
     def get_batch(self, max_n: int, timeout: Optional[float] = None,
                   cancel: Optional[threading.Event] = None
                   ) -> List[Envelope]:
+        raise NotImplementedError
+
+    def ack(self, flush: bool = False) -> None:
+        """Acknowledge this thread's held lease: the envelopes of the
+        last ``get_batch`` are safely handed off and must never be
+        redelivered.  Normally the ack piggybacks on the next outgoing
+        frame (zero extra round-trips); ``flush=True`` forces it onto
+        the wire immediately (e.g. right before a worker exits)."""
         raise NotImplementedError
 
     def wake(self) -> None:
@@ -81,6 +180,11 @@ class Transport:
     """Factory of channels plus fabric-wide control operations."""
 
     name = "base"
+    #: seconds before an unacked lease expires and its envelopes requeue.
+    #: Must exceed the longest consumer hold (a pool worker holds its
+    #: dispatch lease for the task's full execution); premature expiry is
+    #: *safe* (claim dedups the raced completions) but wasteful.
+    lease_timeout: float = 30.0
 
     def channel(self, topic: str, kind: str) -> Channel:
         raise NotImplementedError
@@ -90,10 +194,34 @@ class Transport:
 
     def claim(self, task_id: str) -> bool:
         """Atomic first-completion claim (straggler-race dedup across
-        processes).  Returns True for exactly one claimant per id.  The
-        local backend has no cross-process races to arbitrate, so the
-        in-process Task Server keeps its own dedup window and this
-        default is only used by the process pool."""
+        processes).  Returns True for exactly one claimant per id.
+        Prefer ``Channel.put(env, claim=id)`` which fuses the claim with
+        the publish; this standalone op remains for callers that need
+        the arbitration without an enqueue."""
+        raise NotImplementedError
+
+    def snapshot(self) -> bytes:
+        """Serialize every queue's state -- queued envelopes, in-flight
+        leases (as durations, so the bytes carry no wall-clock and a
+        snapshot->restore->snapshot round-trip is byte-identical), wake
+        epochs, and the claim/dedup window.  Implementations MUST
+        capture all queues plus the claim window as one consistent cut
+        (both backends hold the claim guard and every queue's Condition
+        simultaneously): a one-queue-at-a-time capture could image a
+        claim without its published result, or miss an envelope
+        mid-relay between queues -- both are lost tasks after a resume,
+        which checkpoint/resume's zero-loss guarantee forbids."""
+        raise NotImplementedError
+
+    def restore(self, data: bytes, expire_leases: bool = False) -> None:
+        """Replace this transport's queue state with a ``snapshot``.
+        By default restored in-flight leases re-arm for their full
+        duration and requeue on expiry (state-faithful: a
+        restore->snapshot round-trip is byte-identical).  Pass
+        ``expire_leases=True`` when the previous incarnation is known
+        dead (``ColmenaQueues.resume`` does): leased envelopes requeue
+        immediately instead of waiting out leases nobody holds.
+        Intended for a *fresh* fabric before consumers start."""
         raise NotImplementedError
 
     def close(self) -> None:

@@ -7,16 +7,34 @@ workers) speak the frame protocol of ``frames.py``; the broker keeps a
 structure as the local backend, just on the other side of a socket:
 
 - ``put``  appends the sender's envelope bytes verbatim and notifies one
-  parked getter (payloads are relayed, never unpickled).
+  parked getter (payloads are relayed, never unpickled).  A ``claim`` id
+  in the header fuses an atomic first-completion claim with the enqueue:
+  only the first claimant's envelope is published, so there is no window
+  where an id is claimed but its result died with the claimant.
 - ``get``  parks the connection's handler thread on the queue Condition
   until items arrive, the wake epoch bumps, or the timeout lapses; up to
   ``max_n`` envelopes come back concatenated in one response frame.
+  The dequeue is **leased**, not destructive: the envelopes move to the
+  queue's in-flight ledger under a lease id returned with the response,
+  and only an ``ack`` deletes them.  An unacked lease (consumer death, a
+  response frame lost with its connection) expires after its duration
+  and the envelopes are requeued at the front -- parked getters bound
+  their waits by the earliest lease deadline and run the expiry
+  themselves, so redelivery needs no sweeper thread.
+- ``ack``  releases leases.  Acks almost never arrive as their own
+  frame: every request header may carry a piggybacked ``acks`` list that
+  is applied before the op, so consumers commit their previous batch on
+  the frame they were sending anyway.
 - ``wake`` bumps every queue's epoch and notifies all -- pending gets
   return (possibly empty) so client-side cancel events propagate without
   any polling loop.
-- ``claim`` is an atomic first-completion test-and-set used by worker
-  pools to dedup straggler-race duplicates across processes (bounded
-  window, mirroring the in-process Task Server's ``_BoundedIdSet``).
+- ``claim`` is the standalone first-completion test-and-set (kept for
+  callers that need arbitration without an enqueue; result publication
+  uses the fused put-with-claim above).
+- ``snapshot`` / ``restore`` serialize / replace the broker's whole
+  state: queued + in-flight envelopes, lease durations (never wall-clock
+  deadlines, so identical state gives identical bytes), wake epochs, and
+  the claim window.  This is what campaign-level checkpointing rides on.
 
 The listening socket is bound in the *parent* before forking the broker
 process, so there is no readiness race: by the time the constructor
@@ -29,7 +47,8 @@ from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.transport import frames
-from repro.core.transport.base import BoundedIdSet
+from repro.core.transport.base import (BoundedIdSet, dump_snapshot,
+                                       load_snapshot)
 from repro.utils.timing import now
 
 
@@ -38,6 +57,12 @@ class _BrokerQueue:
         self.items: deque = deque()        # (t_put, meta, data)
         self.cond = threading.Condition()
         self.epoch = 0
+        # lease_id -> (duration, deadline, [(t_put, meta, data), ...]);
+        # all access under self.cond.  Lease ids are per-queue, so an ack
+        # addresses (topic, kind, lease_id) and needs no broker-global
+        # index (and no second lock on the get hot path).
+        self.leases: Dict[int, Tuple[float, float, list]] = {}
+        self.next_lease = 0
 
 
 class Broker:
@@ -54,21 +79,62 @@ class Broker:
                 q = self._queues[(topic, kind)] = _BrokerQueue()
             return q
 
+    # -- lease plumbing (call with q.cond held) -----------------------------
+
+    @staticmethod
+    def _expire_locked(q: _BrokerQueue) -> None:
+        if not q.leases:
+            return
+        tnow = now()
+        expired = [lid for lid, (_, deadline, _) in q.leases.items()
+                   if deadline <= tnow]
+        if not expired:
+            return
+        for lid in expired:
+            _, _, items = q.leases.pop(lid)
+            for t_put, meta, data in reversed(items):
+                meta = dict(meta)
+                meta["redelivered"] = meta.get("redelivered", 0) + 1
+                q.items.appendleft((t_put, meta, data))
+        q.cond.notify_all()
+
+    @staticmethod
+    def _next_lease_deadline_locked(q: _BrokerQueue) -> Optional[float]:
+        if not q.leases:
+            return None
+        return min(deadline for _, deadline, _ in q.leases.values())
+
     # -- ops ----------------------------------------------------------------
 
     def put(self, topic: str, kind: str, t_put: float, meta: dict,
-            data: bytes) -> None:
+            data: bytes, claim: Optional[str] = None) -> bool:
         q = self._queue(topic, kind)
+        if claim is not None:
+            # the claim lock is held ACROSS the enqueue (lock order:
+            # claim_lock -> q.cond, same as snapshot) so a snapshot can
+            # never capture the claim without its result -- that image
+            # would dedup the redelivered re-execution and lose the task
+            with self._claim_lock:
+                if not self._claimed.claim(claim):
+                    return False            # duplicate publisher: swallowed
+                with q.cond:
+                    q.items.append((t_put, meta, data))
+                    q.cond.notify()
+            return True
         with q.cond:
             q.items.append((t_put, meta, data))
             q.cond.notify()
+        return True
 
     def get(self, topic: str, kind: str, max_n: int,
-            timeout: Optional[float], last_epoch: Optional[int]
-            ) -> Tuple[List[tuple], bool, int]:
-        """Blocking batched drain.  Returns (items, woken, epoch): ``woken``
-        tells the client an empty response came from a wake (re-check
-        cancel and possibly re-park) rather than a timeout.
+            timeout: Optional[float], last_epoch: Optional[int],
+            lease_timeout: float
+            ) -> Tuple[List[tuple], bool, int, Optional[int]]:
+        """Blocking batched leased drain.  Returns (items, woken, epoch,
+        lease): ``woken`` tells the client an empty response came from a
+        wake (re-check cancel and possibly re-park) rather than a
+        timeout; ``lease`` is the id the client must ack once the batch
+        is safely handed off (None when no items were returned).
 
         ``last_epoch`` is the wake epoch the client observed on its
         previous response (None on a channel's first request).  Parking
@@ -80,23 +146,51 @@ class Broker:
         q = self._queue(topic, kind)
         deadline = None if timeout is None else now() + timeout
         with q.cond:
+            self._expire_locked(q)
             if not q.items and (last_epoch is None
                                 or q.epoch != last_epoch):
-                return [], True, q.epoch    # epoch sync / missed wake
+                return [], True, q.epoch, None  # epoch sync / missed wake
             while not q.items:
                 if q.epoch != last_epoch:
-                    return [], True, q.epoch
-                if deadline is None:
-                    q.cond.wait()
-                else:
+                    return [], True, q.epoch, None
+                remaining = None
+                if deadline is not None:
                     remaining = deadline - now()
                     if remaining <= 0:
-                        return [], False, q.epoch
+                        return [], False, q.epoch, None
+                # bound the park by the earliest in-flight lease deadline
+                # so this getter requeues expired leases itself
+                lease_dl = self._next_lease_deadline_locked(q)
+                if lease_dl is not None:
+                    until_lease = max(lease_dl - now(), 0.0)
+                    remaining = (until_lease if remaining is None
+                                 else min(remaining, until_lease))
+                if remaining is None:
+                    q.cond.wait()
+                else:
                     q.cond.wait(remaining)
+                self._expire_locked(q)
             out = []
             while q.items and len(out) < max_n:
                 out.append(q.items.popleft())
-            return out, False, q.epoch
+            lid = q.next_lease
+            q.next_lease += 1
+            # `out` is owned by this handler and never mutated after the
+            # response is built: the ledger can share it (no copy)
+            q.leases[lid] = (lease_timeout, now() + lease_timeout, out)
+            if len(q.leases) == 1:
+                # empty -> non-empty lease transition: getters parked
+                # before any lease existed wait *unbounded* (or until
+                # their own deadline) -- wake them so they re-arm their
+                # park bounded by this lease's expiry, otherwise nobody
+                # would ever run the expiry that redelivers it
+                q.cond.notify_all()
+            return out, False, q.epoch, lid
+
+    def ack(self, topic: str, kind: str, lease_id: int) -> None:
+        q = self._queue(topic, kind)
+        with q.cond:
+            q.leases.pop(lease_id, None)    # already expired: no-op
 
     def wake(self) -> None:
         with self._qlock:
@@ -113,27 +207,89 @@ class Broker:
     def qlen(self, topic: str, kind: str) -> int:
         q = self._queue(topic, kind)
         with q.cond:
+            self._expire_locked(q)
             return len(q.items)
+
+    # -- snapshot/restore -----------------------------------------------------
+
+    def snapshot(self) -> bytes:
+        """A *consistent global cut*: the claim lock plus every queue
+        Condition are held simultaneously (acquired in the same sorted
+        order everywhere, claim lock first -- matching put-with-claim's
+        claim_lock -> cond order), so no envelope mid-relay between two
+        queues and no claim-fused publish can straddle the image.  An
+        envelope captured in two queues (leased upstream and already
+        relayed downstream) merely re-executes into the claim dedup;
+        captured in neither would be a lost task, and cannot happen."""
+        from contextlib import ExitStack
+        with self._qlock:
+            queues = sorted(self._queues.items())
+        with ExitStack() as stack:
+            stack.enter_context(self._claim_lock)
+            for _, q in queues:
+                stack.enter_context(q.cond)
+            out = []
+            for (topic, kind), q in queues:
+                items = list(q.items)
+                leases = sorted((lid, dur, list(lease_items))
+                                for lid, (dur, _, lease_items)
+                                in q.leases.items())
+                out.append((topic, kind, q.epoch, items, leases))
+            order = list(self._claimed._order)
+            maxlen = self._claimed.maxlen
+        return dump_snapshot(out, maxlen, order)
+
+    def restore(self, data: bytes, expire_leases: bool = False) -> None:
+        state = load_snapshot(data)
+        tnow = now()
+        for topic, kind, epoch, items, leases in state["queues"]:
+            q = self._queue(topic, kind)
+            with q.cond:
+                q.items = deque(items)
+                q.epoch = epoch
+                # deadline = tnow when expiring: the holders died with the
+                # previous incarnation, so the expiry below requeues now
+                q.leases = {lid: (dur, tnow if expire_leases else tnow + dur,
+                                  list(lease_items))
+                            for lid, dur, lease_items in leases}
+                if q.leases:
+                    q.next_lease = max(q.leases) + 1
+                if expire_leases:
+                    self._expire_locked(q)
+                q.cond.notify_all()
+        with self._claim_lock:
+            claimed = BoundedIdSet(state["claims"]["maxlen"])
+            for cid in state["claims"]["order"]:
+                claimed.add(cid)
+            self._claimed = claimed
 
     # -- frame dispatch -------------------------------------------------------
 
     def handle(self, header: dict, payload: bytes
                ) -> Optional[Tuple[dict, bytes]]:
+        # piggybacked acks commit the sender's previous batches before
+        # the op itself runs (so a put that triggers redelivery can never
+        # race ahead of the ack it travelled with)
+        for topic, kind, lid in header.get("acks", ()):
+            self.ack(topic, kind, lid)
         op = header["op"]
         if op == "put":
-            self.put(header["topic"], header["kind"], header["t_put"],
-                     header["meta"], payload)
-            return {"ok": True}, b""
+            ok = self.put(header["topic"], header["kind"], header["t_put"],
+                          header["meta"], payload, header.get("claim"))
+            return {"ok": True, "claimed": ok}, b""
         if op == "get":
-            items, woken, epoch = self.get(
+            items, woken, epoch, lease = self.get(
                 header["topic"], header["kind"], header["max_n"],
-                header["timeout"], header.get("epoch"))
+                header["timeout"], header.get("epoch"),
+                header.get("lease_timeout", 30.0))
             lens, blobs = [], []
             for t_put, meta, data in items:
                 lens.append((t_put, meta, len(data)))
                 blobs.append(data)
-            return {"envs": lens, "woken": woken,
-                    "epoch": epoch}, b"".join(blobs)
+            return {"envs": lens, "woken": woken, "epoch": epoch,
+                    "lease": lease}, b"".join(blobs)
+        if op == "ack":                     # explicit flush (rare path)
+            return {"ok": True}, b""
         if op == "wake":
             self.wake()
             return {"ok": True}, b""
@@ -141,6 +297,11 @@ class Broker:
             return {"claimed": self.claim(header["id"])}, b""
         if op == "len":
             return {"n": self.qlen(header["topic"], header["kind"])}, b""
+        if op == "snapshot":
+            return {"ok": True}, self.snapshot()
+        if op == "restore":
+            self.restore(payload, header.get("expire_leases", False))
+            return {"ok": True}, b""
         if op == "ping":
             return {"ok": True}, b""
         if op == "shutdown":

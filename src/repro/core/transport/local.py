@@ -5,6 +5,15 @@ it sits behind the same ``Transport`` interface as the socket backend.
 Consumers park on the condition until a ``put`` (or an external ``wake``,
 e.g. shutdown) notifies them, and can drain a batch per wakeup -- there is
 no timeout-polling anywhere on the dispatch or result-consumption path.
+
+Delivery is leased exactly like the broker's (see ``base.Channel``): a
+``get_batch`` moves envelopes to an in-flight ledger under a per-thread
+lease, ``ack`` removes them for good, and an unacked lease expires after
+``lease_timeout`` and requeues -- parked getters bound their waits by the
+earliest lease deadline and run the expiry themselves, so redelivery
+needs no sweeper thread.  The local backend has no consumer *processes*
+to die, but implementing the identical interface in-process means every
+lease/ack/snapshot test parametrizes over both backends.
 """
 from __future__ import annotations
 
@@ -13,73 +22,147 @@ from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.transport.base import (BoundedIdSet, Channel, Envelope,
-                                       Transport)
+                                       Transport, dump_snapshot,
+                                       load_snapshot)
 from repro.utils.timing import now
 
 
 class LocalChannel(Channel):
-    """FIFO of envelopes with Condition-notified blocking consumers."""
+    """FIFO of envelopes with Condition-notified blocking consumers and
+    an in-flight lease ledger for at-least-once delivery."""
 
-    def __init__(self):
+    def __init__(self, transport: "LocalTransport"):
+        self._t = transport
         self._items: "deque[Envelope]" = deque()
         self._cond = threading.Condition()
+        self.epoch = 0                        # parity with the broker queue
+        # lease_id -> (duration, deadline, [Envelope, ...]); all access
+        # under self._cond
+        self._leases: Dict[int, Tuple[float, float, List[Envelope]]] = {}
+        self._next_lease = 0
+        self._tls = threading.local()         # .held: this thread's lease
 
-    def put(self, env: Envelope) -> None:
+    # -- lease plumbing (call with self._cond held) -------------------------
+
+    def _expire_locked(self) -> None:
+        if not self._leases:
+            return
+        tnow = now()
+        expired = [lid for lid, (_, deadline, _) in self._leases.items()
+                   if deadline <= tnow]
+        if not expired:
+            return
+        for lid in expired:
+            _, _, envs = self._leases.pop(lid)
+            for env in reversed(envs):
+                meta = dict(env.meta)
+                meta["redelivered"] = meta.get("redelivered", 0) + 1
+                self._items.appendleft(Envelope(env.t_put, env.data, meta))
+        self._cond.notify_all()
+
+    def _next_lease_deadline_locked(self) -> Optional[float]:
+        if not self._leases:
+            return None
+        return min(deadline for _, deadline, _ in self._leases.values())
+
+    # -- Channel interface --------------------------------------------------
+
+    def put(self, env: Envelope, claim: Optional[str] = None) -> bool:
+        if claim is not None:
+            # the claim guard is held ACROSS the enqueue (lock order:
+            # transport lock -> cond, same as snapshot) so a snapshot
+            # can never capture the claim without its result
+            with self._t._lock:
+                if not self._t._claimed.claim(claim):
+                    return False
+                with self._cond:
+                    self._items.append(env)
+                    self._cond.notify()
+            return True
         with self._cond:
             self._items.append(env)
             self._cond.notify()
-
-    def get(self, timeout: Optional[float] = None,
-            cancel: Optional[threading.Event] = None) -> Optional[Envelope]:
-        deadline = None if timeout is None else now() + timeout
-        with self._cond:
-            while True:
-                if self._items:
-                    return self._items.popleft()
-                if cancel is not None and cancel.is_set():
-                    return None
-                if deadline is None:
-                    self._cond.wait()
-                else:
-                    remaining = deadline - now()
-                    if remaining <= 0:
-                        return None
-                    self._cond.wait(remaining)
+        return True
 
     def get_batch(self, max_n: int, timeout: Optional[float] = None,
                   cancel: Optional[threading.Event] = None
                   ) -> List[Envelope]:
-        first = self.get(timeout=timeout, cancel=cancel)
-        if first is None:
-            return []
-        out = [first]
+        self.ack()                            # poll-is-commit backstop
+        deadline = None if timeout is None else now() + timeout
         with self._cond:
-            while self._items and len(out) < max_n:
-                out.append(self._items.popleft())
-        return out
+            while True:
+                self._expire_locked()
+                if self._items:
+                    out = []
+                    while self._items and len(out) < max_n:
+                        out.append(self._items.popleft())
+                    lid = self._next_lease
+                    self._next_lease += 1
+                    dur = self._t.lease_timeout
+                    # `out` is returned to exactly one caller and never
+                    # mutated: the ledger can share it (no copy)
+                    self._leases[lid] = (dur, now() + dur, out)
+                    if len(self._leases) == 1:
+                        # getters parked before any lease existed wait
+                        # unbounded: wake them to re-arm their park
+                        # bounded by this lease's expiry (see broker.get)
+                        self._cond.notify_all()
+                    self._tls.held = lid
+                    return out
+                if cancel is not None and cancel.is_set():
+                    return []
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - now()
+                    if remaining <= 0:
+                        return []
+                lease_dl = self._next_lease_deadline_locked()
+                if lease_dl is not None:
+                    until_lease = max(lease_dl - now(), 0.0)
+                    remaining = (until_lease if remaining is None
+                                 else min(remaining, until_lease))
+                if remaining is None:
+                    self._cond.wait()
+                else:
+                    self._cond.wait(remaining)
+
+    def ack(self, flush: bool = False) -> None:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            return
+        self._tls.held = None
+        with self._cond:
+            self._leases.pop(held, None)      # already expired: no-op
 
     def wake(self) -> None:
         with self._cond:
+            self.epoch += 1
             self._cond.notify_all()
 
     def __len__(self) -> int:
         with self._cond:
             return len(self._items)
 
+    def inflight_count(self) -> int:
+        with self._cond:
+            return sum(len(envs) for _, _, envs in self._leases.values())
+
 
 class LocalTransport(Transport):
     name = "local"
 
-    def __init__(self, claim_window: int = 1 << 16):
+    def __init__(self, claim_window: int = 1 << 16,
+                 lease_timeout: float = 30.0):
         self._channels: Dict[Tuple[str, str], LocalChannel] = {}
         self._lock = threading.Lock()
         self._claimed = BoundedIdSet(claim_window)
+        self.lease_timeout = lease_timeout
 
     def channel(self, topic: str, kind: str) -> LocalChannel:
         with self._lock:
             ch = self._channels.get((topic, kind))
             if ch is None:
-                ch = self._channels[(topic, kind)] = LocalChannel()
+                ch = self._channels[(topic, kind)] = LocalChannel(self)
             return ch
 
     def wake_all(self) -> None:
@@ -91,6 +174,55 @@ class LocalTransport(Transport):
     def claim(self, task_id: str) -> bool:
         with self._lock:
             return self._claimed.claim(task_id)
+
+    # -- snapshot/restore ---------------------------------------------------
+
+    def snapshot(self) -> bytes:
+        """Consistent global cut, mirroring the broker: the transport
+        lock (which guards claims) plus every channel Condition are held
+        simultaneously, so no claim-fused put and no envelope mid-relay
+        between channels can straddle the image."""
+        from contextlib import ExitStack
+        with ExitStack() as stack:
+            stack.enter_context(self._lock)
+            channels = sorted(self._channels.items())
+            for _, ch in channels:
+                stack.enter_context(ch._cond)
+            queues = []
+            for (topic, kind), ch in channels:
+                items = [(e.t_put, e.meta, e.data) for e in ch._items]
+                leases = sorted(
+                    (lid, dur, [(e.t_put, e.meta, e.data) for e in envs])
+                    for lid, (dur, _, envs) in ch._leases.items())
+                queues.append((topic, kind, ch.epoch, items, leases))
+            order = list(self._claimed._order)
+            maxlen = self._claimed.maxlen
+        return dump_snapshot(queues, maxlen, order)
+
+    def restore(self, data: bytes, expire_leases: bool = False) -> None:
+        state = load_snapshot(data)
+        tnow = now()
+        for topic, kind, epoch, items, leases in state["queues"]:
+            ch = self.channel(topic, kind)
+            with ch._cond:
+                ch._items = deque(Envelope(t, d, m) for t, m, d in items)
+                ch.epoch = epoch
+                # deadline = tnow when expiring: the holders died with the
+                # previous incarnation, so the next expiry check requeues
+                ch._leases = {
+                    lid: (dur, tnow if expire_leases else tnow + dur,
+                          [Envelope(t, d, m) for t, m, d in envs])
+                    for lid, dur, envs in leases}
+                if ch._leases:
+                    ch._next_lease = max(ch._leases) + 1
+                if expire_leases:
+                    ch._expire_locked()
+                ch._cond.notify_all()
+        with self._lock:
+            claimed = BoundedIdSet(state["claims"]["maxlen"])
+            for cid in state["claims"]["order"]:
+                claimed.add(cid)
+            self._claimed = claimed
 
     def close(self) -> None:
         self.wake_all()

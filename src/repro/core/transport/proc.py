@@ -7,6 +7,15 @@ block in ``recv`` while the broker parks their handler thread on the queue
 Condition -- there is no polling on either side of the wire.  The
 transport object is safe to capture in forked workers: its ``FrameClient``
 reopens connections per (pid, thread).
+
+Delivery is leased (see ``base.Channel``): every non-empty ``get``
+response carries a lease id, and the envelopes are only destroyed when
+the consumer acks it.  Acks accumulate in a transport-level pending set
+and piggyback on the *next* outgoing frame -- any frame, to any channel
+of the same broker -- so committing a batch costs zero extra round
+trips.  If a frame carrying acks dies with its connection, the acks are
+restored to the pending set: the worst case is a redundant redelivery
+that the publisher-side ``claim`` dedups, never a lost task.
 """
 from __future__ import annotations
 
@@ -30,22 +39,26 @@ class ProcChannel(Channel):
         self._t = transport
         self.topic = topic
         self.kind = kind
-        # last wake epoch observed from the broker, tracked PER THREAD
-        # (like FrameClient's sockets): the broker only parks a get whose
-        # epoch is current, so a wake_all landing between a thread's
+        # wake epoch and held lease observed from the broker, tracked PER
+        # THREAD (like FrameClient's sockets): the broker only parks a get
+        # whose epoch is current, so a wake_all landing between a thread's
         # cancel check and its request is detected, never lost -- and one
-        # consumer thread absorbing a wake cannot advance a sibling
-        # consumer's epoch past the wake it still needs to observe
+        # consumer thread absorbing a wake (or acking its lease) cannot
+        # clobber a sibling consumer's epoch or lease
         self._tls = threading.local()
 
-    def put(self, env: Envelope) -> None:
-        self._t.client.request(
-            {"op": "put", "topic": self.topic, "kind": self.kind,
-             "t_put": env.t_put, "meta": env.meta}, env.data)
+    def put(self, env: Envelope, claim: Optional[str] = None) -> bool:
+        header = {"op": "put", "topic": self.topic, "kind": self.kind,
+                  "t_put": env.t_put, "meta": env.meta}
+        if claim is not None:
+            header["claim"] = claim
+        resp, _ = self._t.request(header, env.data)
+        return resp.get("claimed", True)
 
     def get_batch(self, max_n: int, timeout: Optional[float] = None,
                   cancel: Optional[threading.Event] = None
                   ) -> List[Envelope]:
+        self.ack()                          # poll-is-commit backstop
         deadline = None if timeout is None else now() + timeout
         while True:
             if cancel is not None and cancel.is_set():
@@ -56,12 +69,21 @@ class ProcChannel(Channel):
                 if remaining <= 0:
                     return []
             epoch = getattr(self._tls, "epoch", None)
-            header, blob = self._t.client.request(
+            # NOTE no retry= here: a broker-side get is a *leased* dequeue,
+            # so a response frame lost with its connection only strands a
+            # lease that expires and redelivers -- but an automatic
+            # reconnect-resend would still fetch *different* envelopes
+            # under a fresh lease while this caller believes it asked
+            # once.  Surfacing the error keeps the failure visible; the
+            # lease ledger (not a resend) is what makes it recoverable.
+            header, blob = self._t.request(
                 {"op": "get", "topic": self.topic, "kind": self.kind,
                  "max_n": max_n, "timeout": remaining,
-                 "epoch": epoch}, retry=True)
+                 "lease_timeout": self._t.lease_timeout,
+                 "epoch": epoch})
             self._tls.epoch = header["epoch"]
             if header["envs"]:
+                self._tls.held = header["lease"]
                 out, off = [], 0
                 for t_put, meta, n in header["envs"]:
                     out.append(Envelope(t_put, blob[off:off + n], meta))
@@ -72,11 +94,21 @@ class ProcChannel(Channel):
             # woken (wake_all) or first-request epoch sync: re-check
             # cancel/deadline, then re-park with a current epoch
 
+    def ack(self, flush: bool = False) -> None:
+        held = getattr(self._tls, "held", None)
+        if held is not None:
+            self._tls.held = None
+            self._t.queue_ack((self.topic, self.kind, held))
+        if flush:
+            self._t.flush_acks()
+
     def wake(self) -> None:
         self._t.wake_all()
 
     def __len__(self) -> int:
-        header, _ = self._t.client.request(
+        # retry=True is safe: len is a read-only probe, a resend cannot
+        # change broker state
+        header, _ = self._t.request(
             {"op": "len", "topic": self.topic, "kind": self.kind},
             retry=True)
         return header["n"]
@@ -85,12 +117,19 @@ class ProcChannel(Channel):
 class ProcTransport(Transport):
     name = "proc"
 
-    def __init__(self, address: Optional[tuple] = None):
+    def __init__(self, address: Optional[tuple] = None,
+                 lease_timeout: float = 30.0):
         """address: connect to an existing broker (another process's
-        fabric); None forks a fresh broker owned by this transport."""
+        fabric); None forks a fresh broker owned by this transport.
+        lease_timeout: seconds before an unacked get lease expires and
+        its envelopes are redelivered; must exceed the longest consumer
+        hold (a pool worker holds its lease for the task's execution)."""
         self._proc = None
         self._dir = None
         self._owner_pid = os.getpid()
+        self.lease_timeout = lease_timeout
+        self._pending_acks: list = []
+        self._ack_lock = threading.Lock()
         if address is None:
             self._dir = tempfile.mkdtemp(prefix="colmena-broker-")
             sock, address = frames.make_server_socket(
@@ -103,18 +142,72 @@ class ProcTransport(Transport):
         self.address = address
         self.client = frames.FrameClient(address)
 
+    # -- ack piggybacking ---------------------------------------------------
+
+    def queue_ack(self, ack: tuple) -> None:
+        with self._ack_lock:
+            self._pending_acks.append(ack)
+
+    def flush_acks(self) -> None:
+        """Force pending acks onto the wire now (normally they ride the
+        next frame; use before exiting a consumer)."""
+        with self._ack_lock:
+            if not self._pending_acks:
+                return
+        self.request({"op": "ack"})
+
+    def request(self, header: dict, payload: bytes = b"",
+                retry: bool = False):
+        """All broker traffic funnels through here so any frame can carry
+        the pending acks.  On a failed send the acks are restored: they
+        ride the next successful frame, and until then the leases just
+        stay in-flight (expiry + claim dedup make that safe)."""
+        acks = None
+        with self._ack_lock:
+            if self._pending_acks:
+                acks = self._pending_acks
+                self._pending_acks = []
+        if acks:
+            header = dict(header)
+            header["acks"] = acks
+        try:
+            return self.client.request(header, payload, retry=retry)
+        except (ConnectionError, OSError):
+            if acks:
+                with self._ack_lock:
+                    self._pending_acks = acks + self._pending_acks
+            raise
+
+    # -- Transport interface ------------------------------------------------
+
     def channel(self, topic: str, kind: str) -> ProcChannel:
         return ProcChannel(self, topic, kind)
 
     def wake_all(self) -> None:
         try:
-            self.client.request({"op": "wake"}, retry=True)
+            # retry=True is safe: wake only bumps epochs; waking twice is
+            # indistinguishable from waking once to every consumer
+            self.request({"op": "wake"}, retry=True)
         except (ConnectionError, OSError):
             pass                    # broker already torn down: nothing parked
 
     def claim(self, task_id: str) -> bool:
-        header, _ = self.client.request({"op": "claim", "id": task_id})
+        # deliberately NOT retried: a resend of a claim that was applied
+        # before the connection died would answer False to the rightful
+        # first claimant
+        header, _ = self.request({"op": "claim", "id": task_id})
         return header["claimed"]
+
+    def snapshot(self) -> bytes:
+        # retry=True is safe: snapshot is a read-only serialization
+        _, payload = self.request({"op": "snapshot"}, retry=True)
+        return payload
+
+    def restore(self, data: bytes, expire_leases: bool = False) -> None:
+        # retry=True is safe: restore wholesale-replaces broker state, so
+        # applying the same snapshot twice converges to the same state
+        self.request({"op": "restore", "expire_leases": expire_leases},
+                     data, retry=True)
 
     def close(self) -> None:
         # only the process that forked the broker may tear it down

@@ -167,6 +167,7 @@ class ShardedValueServer:
         return header["key"]
 
     def get(self, key: str):
+        # retry=True is safe: vs_get is a read-only probe
         header, payload = self._client(key).request(
             {"op": "vs_get", "key": key}, retry=True)
         if not header["ok"]:
@@ -182,9 +183,12 @@ class ShardedValueServer:
         return header["deleted"]
 
     def delete(self, key: str) -> None:
+        # retry=True is safe: deleting an already-deleted key is a no-op,
+        # so a resend of an applied delete converges to the same state
         self._client(key).request({"op": "vs_delete", "key": key}, retry=True)
 
     def size_of(self, key: str) -> int:
+        # retry=True is safe: vs_size_of is a read-only probe
         header, _ = self._client(key).request(
             {"op": "vs_size_of", "key": key}, retry=True)
         if header["size"] is None:
@@ -192,6 +196,7 @@ class ShardedValueServer:
         return header["size"]
 
     def __contains__(self, key: str) -> bool:
+        # retry=True is safe: vs_contains is a read-only probe
         header, _ = self._client(key).request(
             {"op": "vs_contains", "key": key}, retry=True)
         return header["in"]
@@ -209,6 +214,7 @@ class ShardedValueServer:
     def per_shard_stats(self) -> List[dict]:
         out = []
         for c in self._clients:
+            # retry=True is safe: vs_stats is a read-only probe
             header, _ = c.request({"op": "vs_stats"}, retry=True)
             out.append({"len": header["len"], "bytes": header["bytes"],
                         "spilled_bytes": header["spilled_bytes"],
@@ -222,6 +228,7 @@ class ShardedValueServer:
         # the drop-in key set identical across deployments
         agg: Dict[str, int] = {}
         for c in self._clients:
+            # retry=True is safe: vs_stats is a read-only probe
             header, _ = c.request({"op": "vs_stats"}, retry=True)
             for k, v in header["stats"].items():
                 agg[k] = agg.get(k, 0) + v
