@@ -44,6 +44,18 @@ def run(T: int = 200, I: int = 1 << 20, N: int = 8, D: float = 0.005):
         rows.append((f"d0_total_overhead{suffix}",
                      res["total_overhead_median"] * 1e6,
                      f"median lifecycle overhead at D=0, {backend} backend"))
+    # cluster federation: same D=0 run, but the Thinker's local broker is
+    # NOT the topic's home (pools live on the other simulated host), so
+    # every submission and result crosses exactly one relay hop.  The
+    # acceptance bound: the hop costs <= 2x the single-broker proc path.
+    res = run_synapp(SynConfig(T=T, D=0.0, I=1 << 10, O=0, N=N,
+                               use_value_server=False, cluster_hosts=2,
+                               cluster_thinker_remote=True))
+    d0_proc = next(v for name, v, _ in rows
+                   if name == "d0_per_task_wall[proc]")
+    rows.append(("cluster_relay_per_task_wall", res["per_task_wall"] * 1e6,
+                 f"n={res['n_results']}, vs d0_per_task_wall[proc]="
+                 f"{d0_proc:.0f}us, expect <=2x"))
     # proc-backend 1MB row alongside the fig5 numbers: what crossing real
     # process boundaries (and the sharded VS) costs at the paper's I=1MB
     for use_vs in (False, True):

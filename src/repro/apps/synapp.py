@@ -47,6 +47,14 @@ class SynConfig:
                                  # processes + sharded socket Value Server
                                  # (the paper's multi-process topology)
     vs_shards: int = 2           # Value Server shards on the proc backend
+    cluster_hosts: int = 0       # >=2: the multi-host topology -- that many
+                                 # simulated hosts over TCP, each a federated
+                                 # broker + worker pool (workers split across
+                                 # hosts), Thinker attached to host 0
+    cluster_thinker_remote: bool = False
+                                 # all pools on hosts != the thinker's, so
+                                 # every task crosses the federation relay
+                                 # (the bench's relay-cost configuration)
     checkpoint_every: int = 0    # write a checkpoint every K results (0: off)
     checkpoint_path: str = ""    # where checkpoints go (required if K > 0)
     lease_timeout: float = 10.0  # unacked-delivery expiry; bounds how long a
@@ -138,6 +146,60 @@ def syntask(payload: bytes, duration: float, out_bytes: int) -> bytes:
     return b"\0" * out_bytes
 
 
+def _cluster_spec(cfg: SynConfig):
+    """The synapp cluster topology: ``cluster_hosts`` simulated hosts,
+    each a federated broker, with the N workers split across the pool
+    hosts.  Default: every host pools syntask and the Thinker sits with
+    host 0 (its topic traffic is broker-local; other hosts relay).
+    ``cluster_thinker_remote``: host 0 runs *no* pool, so every task
+    submission and result crosses exactly one relay hop -- the
+    configuration the relay-cost bench row measures."""
+    from repro.core.cluster import ClusterSpec, HostSpec
+    k = cfg.cluster_hosts
+    pool_hosts = list(range(1, k)) if cfg.cluster_thinker_remote \
+        else list(range(k))
+    share, rem = divmod(cfg.N, len(pool_hosts))
+    workers = {h: share + (1 if i < rem else 0)
+               for i, h in enumerate(pool_hosts)}
+    shards = {}
+    if cfg.use_value_server:
+        for i in range(cfg.vs_shards):
+            h = pool_hosts[i % len(pool_hosts)]
+            shards[h] = shards.get(h, 0) + 1
+    hosts = [HostSpec(f"h{i}", thinker=(i == 0),
+                      pools=({"syntask": workers[i]} if workers.get(i)
+                             else {}),
+                      vs_shards=shards.get(i, 0))
+             for i in range(k)]
+    return ClusterSpec(hosts, lease_timeout=cfg.lease_timeout)
+
+
+def _run_cluster(cfg: SynConfig, progress):
+    """Materialize the spec, attach the Thinker to its host's broker,
+    and run the campaign across the simulated hosts."""
+    from repro.core.cluster import ClusterLauncher
+    threshold = cfg.proxy_threshold if cfg.use_value_server else None
+    launcher = ClusterLauncher(
+        _cluster_spec(cfg),
+        methods=[(syntask, {"topic": "syntask"})],
+        proxy_threshold=threshold)
+    t0 = time.perf_counter()
+    with launcher:
+        vs = launcher.value_server() if cfg.use_value_server else None
+        queues = launcher.connect(["syntask"], value_server=vs,
+                                  proxy_threshold=threshold)
+        try:
+            thinker = SynThinker(queues, cfg,
+                                 submitted=progress["submitted"],
+                                 completed=progress["completed"])
+            thinker.run(timeout=600)
+            makespan = time.perf_counter() - t0
+        finally:
+            queues.shutdown()
+            queues.transport.client.close()
+    return thinker, makespan
+
+
 def run_synapp(cfg: SynConfig, resume_from: str = ""):
     """Returns per-component median lifecycle times + utilization.
     ``resume_from``: continue from a checkpoint file instead of starting
@@ -164,6 +226,18 @@ def run_synapp(cfg: SynConfig, resume_from: str = ""):
                          "Value Server contents are not captured by the "
                          "fabric checkpoint, so restored task proxies "
                          "would dangle")
+    if cfg.cluster_hosts:
+        if cfg.cluster_hosts < 2:
+            raise ValueError("cluster_hosts simulates a multi-host fabric:"
+                             " use >= 2 (or 0 for single-host backends)")
+        if cfg.checkpoint_every or resume_from:
+            raise ValueError(
+                "synapp's checkpoint demo runs on the single-broker proc"
+                " backend; cluster campaigns checkpoint through"
+                " checkpoint_campaign on the connected queues")
+        thinker, makespan = _run_cluster(
+            cfg, {"submitted": 0, "completed": 0})
+        return _metrics(cfg, thinker, makespan)
     proc = cfg.backend == "proc"
     if not cfg.use_value_server:
         vs = None
@@ -195,7 +269,10 @@ def run_synapp(cfg: SynConfig, resume_from: str = ""):
         queues.shutdown()
         if vs is not None and hasattr(vs, "shutdown"):
             vs.shutdown()
+    return _metrics(cfg, thinker, makespan)
 
+
+def _metrics(cfg: SynConfig, thinker: SynThinker, makespan: float):
     comps = {}
     for r in thinker.results:
         for k, v in r.timer.intervals.items():
@@ -215,6 +292,10 @@ def run_synapp(cfg: SynConfig, resume_from: str = ""):
         "utilization": busy / (cfg.N * makespan) if makespan else 0.0,
         "n_results": n,
         "completed_total": thinker.completed,
+        # cluster runs: which hosts actually executed work (from the
+        # winning worker identities)
+        "hosts_seen": sorted({r.worker.split("/", 1)[0]
+                              for r in thinker.results if r.worker}),
     }
 
 
@@ -226,6 +307,10 @@ def main(argv=None):
     p.add_argument("-I", type=int, default=1 << 20, help="input bytes")
     p.add_argument("-N", type=int, default=8, help="workers")
     p.add_argument("--backend", choices=("local", "proc"), default="local")
+    p.add_argument("--cluster", type=int, default=0, metavar="K",
+                   help="run on K simulated hosts over TCP (federated "
+                        "brokers + per-host worker pools; implies the "
+                        "proc-style topology)")
     p.add_argument("--no-value-server", action="store_true")
     p.add_argument("--checkpoint-every", type=int, default=0, metavar="K",
                    help="checkpoint the fabric every K results")
@@ -235,16 +320,19 @@ def main(argv=None):
                    help="resume from this checkpoint file")
     args = p.parse_args(argv)
     cfg = SynConfig(T=args.T, D=args.D, I=args.I, N=args.N,
-                    backend=args.backend,
+                    backend=args.backend, cluster_hosts=args.cluster,
                     use_value_server=not args.no_value_server,
                     checkpoint_every=args.checkpoint_every,
                     checkpoint_path=args.ckpt)
     res = run_synapp(cfg, resume_from=args.resume)
+    hosts = (f"  hosts {','.join(res['hosts_seen'])}"
+             if args.cluster else "")
     print(f"completed {res['completed_total']}/{cfg.T} "
           f"({res['n_results']} this run)  "
           f"makespan {res['makespan']:.2f}s  "
           f"per-task wall {res['per_task_wall']*1e3:.2f}ms  "
-          f"median overhead {res['total_overhead_median']*1e3:.2f}ms")
+          f"median overhead {res['total_overhead_median']*1e3:.2f}ms"
+          f"{hosts}")
     return res
 
 

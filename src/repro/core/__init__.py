@@ -8,6 +8,8 @@ campaign formulation of §II-A.
 from repro.core.campaign import (AssaySpec, CampaignRecord,  # noqa: F401
                                  Observation, checkpoint_campaign,
                                  resume_campaign)
+from repro.core.cluster import (ClusterLauncher, ClusterSpec,  # noqa: F401
+                                HostSpec)
 from repro.core.message import Result, Task  # noqa: F401
 from repro.core.process_pool import ProcessPoolTaskServer  # noqa: F401
 from repro.core.queues import ColmenaQueues  # noqa: F401

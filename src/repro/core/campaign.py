@@ -133,14 +133,24 @@ class CampaignRecord:
 def checkpoint_campaign(path: str, queues, record: CampaignRecord,
                         extra=None) -> str:
     """Write record + queue state to ``path`` (atomic tmp+rename via
-    ``ColmenaQueues.checkpoint``)."""
+    ``ColmenaQueues.checkpoint``).  Cluster deployments checkpoint the
+    same way: the queues' transport snapshot is then a *federation
+    bundle* (every member broker's consistent cut), so one file still
+    resumes the whole cluster."""
     payload = {"record": record.state(), "extra": extra}
     return queues.checkpoint(path, extra=payload)
 
 
 def resume_campaign(path: str, queues, record: CampaignRecord):
     """Restore ``path`` into a fresh fabric + record; returns the caller's
-    ``extra``.  Call before task servers / Thinker agents start."""
+    ``extra``.  Call before task servers / Thinker agents start.
+
+    ``path`` may also be a broker-side auto-snapshot (``snapshot_every``):
+    those capture queue state only -- the record is left untouched (the
+    application persists it separately, e.g. ``record.save``) and the
+    returned ``extra`` is None."""
     payload = queues.resume(path)
+    if payload is None:
+        return None
     record.load_state(payload["record"])
     return payload["extra"]

@@ -1,0 +1,113 @@
+"""The host agent: what actually runs on a (simulated or real) host.
+
+One agent process per pool-running host.  It dials the host's *local*
+broker, builds a ``ColmenaQueues`` over that connection, registers the
+campaign's methods, and runs a ``ProcessPoolTaskServer`` with the host's
+identity and per-topic backup peers -- then parks until told to stop
+(SIGTERM; the launcher's ``stop``), shutting the pool down cleanly.
+
+Simulated hosts are **forked** by the launcher, so method callables
+(closures included) travel by inheritance; each agent makes itself a
+process-group leader so a chaos ``kill_host`` can take out the agent
+*and* its forked workers in one ``killpg`` -- exactly the blast radius
+of a real node loss.
+
+Real hosts run the same code via ``python -m repro.core.cluster.agent
+--config <file>`` (see ``ClusterLauncher.ssh_commands``): the config is
+a pickled ``AgentConfig`` whose methods are ``"module:qualname"``
+strings resolved by import, since code cannot fork across machines.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import signal
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.process_pool import ProcessPoolTaskServer
+from repro.core.queues import ColmenaQueues
+from repro.core.transport.proc import ProcTransport
+
+
+@dataclass
+class AgentConfig:
+    host: str
+    pools: Dict[str, int]                   # topic -> worker count
+    broker_address: tuple                   # this host's local broker
+    lease_timeout: float = 30.0
+    backup_hosts: Dict[str, List[str]] = field(default_factory=dict)
+    # [(fn_or_"module:qualname", register_kwargs), ...]
+    methods: list = field(default_factory=list)
+    vs_addresses: Optional[list] = None     # Value Server shard addresses
+    proxy_threshold: Optional[int] = None
+    straggler_factor: Optional[float] = None
+    straggler_min_history: int = 5
+
+
+def resolve_method(fn):
+    """A callable passes through (fork inheritance); a
+    ``"module:qualname"`` string imports (the ssh path)."""
+    if callable(fn):
+        return fn
+    mod, _, qual = fn.partition(":")
+    obj = importlib.import_module(mod)
+    for part in qual.split("."):
+        obj = getattr(obj, part)
+    return obj
+
+
+def build_pool(cfg: AgentConfig) -> ProcessPoolTaskServer:
+    transport = ProcTransport(address=cfg.broker_address,
+                              lease_timeout=cfg.lease_timeout)
+    vs = None
+    if cfg.vs_addresses:
+        from repro.core.transport.shards import ShardedValueServer
+        vs = ShardedValueServer.connect(cfg.vs_addresses)
+    queues = ColmenaQueues(sorted(cfg.pools), transport=transport,
+                           value_server=vs,
+                           proxy_threshold=cfg.proxy_threshold)
+    pool = ProcessPoolTaskServer(
+        queues, workers_per_topic=dict(cfg.pools), host=cfg.host,
+        backup_hosts=dict(cfg.backup_hosts),
+        straggler_factor=cfg.straggler_factor,
+        straggler_min_history=cfg.straggler_min_history,
+        # cap the intake drain near this host's own worker count: a host
+        # that leased a 32-deep batch into its private dispatch channel
+        # would hoard work its peers' idle workers can't reach
+        intake_batch=max(2 * max(cfg.pools.values(), default=1), 2))
+    for fn, kwargs in cfg.methods:
+        pool.register(resolve_method(fn), **kwargs)
+    return pool
+
+
+def host_agent_main(cfg: AgentConfig) -> None:
+    """Process entry: run the host's pools until SIGTERM."""
+    os.setpgrp()                            # killpg takes workers with us
+    stop = threading.Event()
+    signal.signal(signal.SIGTERM, lambda *_: stop.set())
+    pool = build_pool(cfg)
+    try:
+        with pool:
+            stop.wait()
+    except (ConnectionError, OSError):
+        pass                                # broker died first: fabric gone
+    os._exit(0)
+
+
+def main(argv=None) -> None:
+    import argparse
+    import pickle
+    p = argparse.ArgumentParser(
+        description="Colmena cluster host agent (real-multi-host entry)")
+    p.add_argument("--config", required=True,
+                   help="pickled AgentConfig (methods as module:qualname)")
+    args = p.parse_args(argv)
+    with open(args.config, "rb") as f:
+        cfg: AgentConfig = pickle.load(f)
+    host_agent_main(cfg)
+
+
+if __name__ == "__main__":
+    main()

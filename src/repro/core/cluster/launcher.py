@@ -1,0 +1,336 @@
+"""Materialize a ClusterSpec: brokers, shards, host agents, supervision.
+
+``ClusterLauncher`` turns the declarative spec into running processes:
+
+1. binds one TCP listening socket per broker host (in the launcher
+   process, so by the time ``start`` returns every address is
+   connectable -- no readiness race), then forks one
+   ``federated_broker_main`` per member with the shared partition map
+   and peer addresses; the coordinator also gets the federation's
+   auto-snapshot config;
+2. forks Value Server shard processes for hosts that declare
+   ``vs_shards`` (the shard address list, in spec order, is the ring
+   every client connects to);
+3. forks one **host agent** per pool-running host (``cluster.agent``):
+   a process-group-leader subprocess that dials its local broker and
+   runs the host's ``ProcessPoolTaskServer`` -- the "simulated host".
+   Real hosts instead run the same agent over ssh
+   (``ssh_commands``/``write_agent_configs``);
+4. supervises the agents: a monitor notices a dead host and starts a
+   **rescue** drain that moves the dead host's still-queued dispatch
+   envelopes back to their global request topics (bytes verbatim), so
+   surviving hosts pick the work up.  In-flight leases held by the dead
+   host's workers expire on their own and land in the same drain;
+   completions the dead host already published are deduped by the claim
+   on the result put -- zero lost, zero duplicated, same as every other
+   failure mode in this fabric;
+5. tears everything down in reverse on ``stop`` (SIGTERM agents,
+   shutdown frames to shards and brokers).
+
+The Thinker lives in the *caller's* process: ``connect()`` returns a
+``ColmenaQueues`` dialing the thinker host's broker (one relay hop for
+topics homed elsewhere -- by default a topic is homed with its first
+pool host, so steady-state task traffic is broker-local to its workers).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import signal
+import sys
+import tempfile
+import threading
+from typing import Dict, List, Optional
+
+from repro.core.cluster.agent import AgentConfig, host_agent_main
+from repro.core.cluster.federation import federated_broker_main
+from repro.core.cluster.spec import ClusterSpec, HostSpec
+from repro.core.process_pool import dispatch_topic
+from repro.core.queues import ColmenaQueues
+from repro.core.transport import frames
+from repro.core.transport.proc import ProcTransport
+
+import multiprocessing
+
+_mp = multiprocessing.get_context("fork")
+
+
+class ClusterLauncher:
+    def __init__(self, spec: ClusterSpec, methods=(), *,
+                 proxy_threshold: Optional[int] = None,
+                 straggler_factor: Optional[float] = None,
+                 straggler_min_history: int = 5,
+                 vs_capacity_bytes: Optional[int] = None,
+                 vs_spill: bool = False):
+        """methods: ``[(fn, register_kwargs), ...]`` applied to every
+        host pool (fn may be a ``"module:qualname"`` string for the ssh
+        path).  proxy_threshold: forwarded to every host agent so
+        workers proxy large *results* through the cluster's Value Server
+        shards -- pass the same value to ``connect`` for the Thinker
+        side.  straggler_factor / straggler_min_history: enable each
+        host pool's straggler monitor (backups then prefer a different
+        host).  vs_capacity_bytes / vs_spill: per-shard memory bound and
+        spill-to-disk tier for the cluster's Value Server shards."""
+        self.spec = spec
+        self.methods = list(methods)
+        self.proxy_threshold = proxy_threshold
+        self.straggler_factor = straggler_factor
+        self.straggler_min_history = straggler_min_history
+        self.vs_capacity_bytes = vs_capacity_bytes
+        self.vs_spill = vs_spill
+        self._addresses: Dict[str, tuple] = {}
+        self._brokers: Dict[str, _mp.Process] = {}
+        self._agents: Dict[str, _mp.Process] = {}
+        self._shards: list = []
+        self.vs_addresses: list = []
+        self._dir: Optional[str] = None
+        self._stop = threading.Event()
+        self._rescued: set = set()
+        self._threads: list = []
+        self._lock = threading.Lock()
+
+    # -- bring-up -----------------------------------------------------------
+
+    def start(self) -> "ClusterLauncher":
+        self._dir = tempfile.mkdtemp(prefix="colmena-cluster-")
+        spec = self.spec
+        # 1) bind every broker address first: the peer map must be
+        # complete before any member starts
+        socks = {}
+        for name in spec.broker_hosts:
+            h = spec.host(name)
+            if h.address is not None:
+                self._addresses[name] = tuple(h.address)  # external broker
+                continue
+            sock, addr = frames.make_server_socket(
+                os.path.join(self._dir, f"{name}.sock"), tcp=True)
+            socks[name] = sock
+            self._addresses[name] = addr
+        partition = spec.partition()
+        for name, sock in socks.items():
+            every, path = 0.0, None
+            if name == spec.coordinator and spec.snapshot_every:
+                every, path = spec.snapshot_every, spec.snapshot_path
+            p = _mp.Process(
+                target=federated_broker_main,
+                args=(sock, name, partition, dict(self._addresses),
+                      every, path),
+                daemon=True, name=f"colmena-broker-{name}")
+            p.start()
+            sock.close()
+            self._brokers[name] = p
+        # 2) Value Server shards (spec order -> the consistent-hash ring)
+        for h in spec.hosts:
+            for i in range(h.vs_shards):
+                self._start_shard(h.name, i)
+        # 3) host agents (simulated hosts; ssh hosts are started by the
+        # operator with ssh_commands)
+        for h in spec.hosts:
+            if h.pools and h.ssh is None:
+                self._start_agent(h)
+        # 4) supervision
+        th = threading.Thread(target=self._monitor_loop, daemon=True,
+                              name="cluster-monitor")
+        th.start()
+        self._threads.append(th)
+        return self
+
+    def _start_shard(self, host: str, idx: int) -> None:
+        from repro.core.transport.shards import _shard_main
+        sock, addr = frames.make_server_socket(
+            os.path.join(self._dir, f"vs-{host}-{idx}.sock"), tcp=True)
+        spill_dir = (os.path.join(self._dir, f"spill-{host}-{idx}")
+                     if self.vs_spill else None)
+        p = _mp.Process(target=_shard_main,
+                        args=(sock, self.vs_capacity_bytes, spill_dir, None),
+                        daemon=True, name=f"colmena-vs-{host}-{idx}")
+        p.start()
+        sock.close()
+        self._shards.append((p, addr))
+        self.vs_addresses.append(addr)
+
+    def _agent_config(self, h: HostSpec) -> AgentConfig:
+        backup = {t: [peer for peer in self.spec.pool_hosts(t)
+                      if peer != h.name]
+                  for t in h.pools}
+        return AgentConfig(
+            host=h.name, pools=dict(h.pools),
+            broker_address=self._addresses[self.spec.local_broker_of(h.name)],
+            lease_timeout=self.spec.lease_timeout,
+            backup_hosts=backup, methods=list(self.methods),
+            vs_addresses=list(self.vs_addresses) or None,
+            proxy_threshold=self.proxy_threshold,
+            straggler_factor=self.straggler_factor,
+            straggler_min_history=self.straggler_min_history)
+
+    def _start_agent(self, h: HostSpec) -> None:
+        p = _mp.Process(target=host_agent_main, args=(self._agent_config(h),),
+                        name=f"colmena-host-{h.name}")
+        p.start()
+        self._agents[h.name] = p
+
+    # -- the real-multi-host hook -------------------------------------------
+
+    def write_agent_configs(self, config_dir: str) -> Dict[str, str]:
+        """Write one pickled AgentConfig per ssh host (methods must be
+        ``"module:qualname"`` strings -- code cannot fork over ssh).
+        Returns host -> config path."""
+        os.makedirs(config_dir, exist_ok=True)
+        out = {}
+        for h in self.spec.hosts:
+            if h.pools and h.ssh is not None:
+                for fn, _ in self.methods:
+                    if callable(fn):
+                        raise ValueError(
+                            f"host {h.name!r} launches over ssh: register"
+                            " methods as 'module:qualname' strings, not"
+                            " callables")
+                path = os.path.join(config_dir, f"{h.name}.agent.pkl")
+                with open(path, "wb") as f:
+                    pickle.dump(self._agent_config(h), f,
+                                protocol=pickle.HIGHEST_PROTOCOL)
+                out[h.name] = path
+        return out
+
+    def ssh_commands(self, config_dir: str) -> Dict[str, List[str]]:
+        """The command an operator (or a future auto-launcher) runs per
+        real host: ship the host's config file there and exec the agent
+        module against it."""
+        paths = self.write_agent_configs(config_dir)
+        return {name: ["ssh", self.spec.host(name).ssh, sys.executable,
+                       "-m", "repro.core.cluster.agent", "--config", path]
+                for name, path in paths.items()}
+
+    # -- client-side wiring -------------------------------------------------
+
+    def address_of(self, host: str) -> tuple:
+        return self._addresses[host]
+
+    def value_server(self):
+        """A fresh client for the cluster's shard ring (None when the
+        spec declares no shards)."""
+        if not self.vs_addresses:
+            return None
+        from repro.core.transport.shards import ShardedValueServer
+        return ShardedValueServer.connect(self.vs_addresses)
+
+    def connect(self, topics=None, **queues_kw) -> ColmenaQueues:
+        """A ``ColmenaQueues`` dialing the thinker host's broker --
+        construct the Thinker on it.  Pass ``value_server=`` /
+        ``proxy_threshold=`` to proxy large payloads through the
+        cluster's shards (``launcher.value_server()``)."""
+        transport = ProcTransport(
+            address=self.address_of(
+                self.spec.local_broker_of(self.spec.thinker_host)),
+            lease_timeout=self.spec.lease_timeout)
+        return ColmenaQueues(topics or self.spec.topics(),
+                             transport=transport, **queues_kw)
+
+    # -- supervision / chaos ------------------------------------------------
+
+    def _monitor_loop(self) -> None:
+        while not self._stop.wait(0.25):
+            for name, p in list(self._agents.items()):
+                if not p.is_alive():
+                    self._start_rescue(name)
+
+    def _start_rescue(self, host: str) -> None:
+        """Idempotently begin draining a dead host's dispatch channels
+        back into the global request topics."""
+        with self._lock:
+            if host in self._rescued:
+                return
+            self._rescued.add(host)
+        th = threading.Thread(target=self._rescue_loop,
+                              args=(self.spec.host(host),),
+                              daemon=True, name=f"cluster-rescue-{host}")
+        th.start()
+        self._threads.append(th)
+
+    def _rescue_loop(self, h: HostSpec) -> None:
+        """The dead host's dispatch queues hold (a) envelopes its intake
+        relayed but no worker picked up, immediately drainable, and (b)
+        envelopes whose worker died holding the lease -- those surface
+        here when the lease expires (our own gets run the expiry).  Each
+        is re-put -- bytes verbatim -- on its topic's global request
+        queue, where a surviving host's intake leases it.  A completion
+        the dead worker managed to publish first makes the re-execution
+        lose the claim: exactly-once holds."""
+        t = ProcTransport(
+            address=self._addresses[self.spec.coordinator],
+            lease_timeout=self.spec.lease_timeout)
+        pairs = [(t.channel(dispatch_topic(h.name, topic), "tasks"),
+                  t.channel(topic, "requests")) for topic in h.pools]
+        while not self._stop.is_set():
+            for disp, req in pairs:
+                try:
+                    envs = disp.get_batch(32, timeout=0.25,
+                                          cancel=self._stop)
+                    if not envs:
+                        continue
+                    for env in envs:
+                        if env.meta.get("stop"):
+                            continue        # a shutdown marker, not work
+                        req.put(env)
+                    disp.ack()
+                except (ConnectionError, OSError, RuntimeError):
+                    return                  # fabric is gone
+        t.client.close()
+
+    def kill_host(self, host: str) -> None:
+        """Chaos: SIGKILL the host's whole process group (agent + its
+        forked workers -- a node loss), then start the rescue drain."""
+        p = self._agents[host]
+        try:
+            os.killpg(p.pid, signal.SIGKILL)
+        except (ProcessLookupError, PermissionError):
+            pass
+        p.join(timeout=5)
+        self._start_rescue(host)
+
+    # -- teardown -----------------------------------------------------------
+
+    def stop(self) -> None:
+        self._stop.set()
+        for name, p in self._agents.items():
+            if p.is_alive():
+                try:
+                    os.kill(p.pid, signal.SIGTERM)
+                except ProcessLookupError:
+                    pass
+        for name, p in self._agents.items():
+            p.join(timeout=5)
+            if p.is_alive():
+                try:
+                    os.killpg(p.pid, signal.SIGKILL)
+                except (ProcessLookupError, PermissionError):
+                    pass
+                p.join(timeout=2)
+        for p, addr in self._shards:
+            try:
+                frames.FrameClient(addr).request({"op": "shutdown"})
+            except (ConnectionError, OSError):
+                pass
+            p.join(timeout=2)
+            if p.is_alive():
+                p.terminate()
+        for name, p in self._brokers.items():
+            try:
+                frames.FrameClient(
+                    self._addresses[name]).request({"op": "shutdown"})
+            except (ConnectionError, OSError):
+                pass
+            p.join(timeout=2)
+            if p.is_alive():
+                p.terminate()
+        for th in self._threads:
+            th.join(timeout=2)
+        if self._dir is not None:
+            import shutil
+            shutil.rmtree(self._dir, ignore_errors=True)
+
+    def __enter__(self) -> "ClusterLauncher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

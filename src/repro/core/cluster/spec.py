@@ -1,0 +1,187 @@
+"""Declarative cluster topology: which hosts exist and what they run.
+
+A ``ClusterSpec`` is a list of ``HostSpec``s -- name, whether the host
+runs a broker, which worker pools (topic -> worker count), how many
+Value Server shards, and whether the Thinker attaches there.  From it
+the spec derives the two pieces of shared knowledge every federation
+member must agree on byte-for-byte:
+
+- ``broker_hosts``: the sorted list of hosts that run brokers (the
+  federation membership; its first element is the **coordinator**, the
+  broker that standalone claims route to and that runs the federation's
+  auto-snapshot).
+- ``partition()``: the topic -> home-broker map.  An application topic
+  is homed at the broker of the first host (spec order) that pools it,
+  so worker dispatch traffic stays on-host; per-host pool channels
+  (``pool@<host>:...``) are homed at that host's broker by a naming
+  rule the federation applies directly; anything else hashes
+  deterministically across the broker hosts.
+
+The spec is pure data (picklable): the launcher forks simulated hosts
+that inherit it, and the ssh hook ships it to real hosts as a file.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+def host_hash_index(name: str, n: int) -> int:
+    """Deterministic (process-independent) index of a string into n
+    buckets -- md5, matching the Value Server's ring hashing rather than
+    Python's salted ``hash``."""
+    h = hashlib.md5(name.encode()).digest()
+    return int.from_bytes(h[:8], "big") % n
+
+
+@dataclass
+class HostSpec:
+    """One host and the roles it runs.
+
+    address: a pre-bound broker address for real multi-host deployments
+    (``("tcp", host, port)``); None lets the launcher bind one on
+    loopback for a simulated host.  ssh: the ssh destination the real
+    multi-host hook targets (``user@node``); None means this host is
+    simulated as a local process group."""
+
+    name: str
+    broker: bool = True
+    pools: Dict[str, int] = field(default_factory=dict)  # topic -> workers
+    vs_shards: int = 0
+    thinker: bool = False
+    address: Optional[tuple] = None
+    ssh: Optional[str] = None
+
+
+class ClusterSpec:
+    def __init__(self, hosts: List[HostSpec], *,
+                 partition: Optional[Dict[str, str]] = None,
+                 lease_timeout: float = 30.0,
+                 snapshot_every: float = 0.0,
+                 snapshot_path: str = ""):
+        """partition: explicit topic -> home-broker-host overrides (the
+        derived default homes each topic at its first pool host).
+        snapshot_every/snapshot_path: periodic auto-snapshot of the
+        whole federation, written by the coordinator broker."""
+        if not hosts:
+            raise ValueError("a ClusterSpec needs at least one host")
+        names = [h.name for h in hosts]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate host names in spec: {names}")
+        for h in hosts:
+            if "/" in h.name or ":" in h.name or "@" in h.name:
+                raise ValueError(
+                    f"host name {h.name!r} may not contain '/', ':' or '@'"
+                    " (they delimit worker identities and pool channels)")
+        self.hosts = list(hosts)
+        self.lease_timeout = lease_timeout
+        self.snapshot_every = snapshot_every
+        self.snapshot_path = snapshot_path
+        self._overrides = dict(partition or {})
+        if not self.broker_hosts:
+            raise ValueError("no host in the spec runs a broker")
+        bad = [t for t, h in self._overrides.items()
+               if h not in self.broker_hosts]
+        if bad:
+            raise ValueError(
+                f"partition overrides {bad} name hosts without brokers")
+        if snapshot_every and not snapshot_path:
+            raise ValueError("snapshot_every is set but snapshot_path is"
+                             " empty")
+        thinkers = [h.name for h in hosts if h.thinker]
+        if len(thinkers) > 1:
+            raise ValueError(f"more than one thinker host: {thinkers}")
+
+    # -- derived membership --------------------------------------------------
+
+    @property
+    def broker_hosts(self) -> List[str]:
+        """Sorted: every federation member derives the identical list
+        (and the identical coordinator, its first element)."""
+        return sorted(h.name for h in self.hosts if h.broker)
+
+    @property
+    def coordinator(self) -> str:
+        return self.broker_hosts[0]
+
+    @property
+    def thinker_host(self) -> str:
+        """Where the Thinker attaches: the flagged host, else the
+        coordinator.  (The Thinker itself is the caller's process; this
+        only selects which broker it dials.)"""
+        for h in self.hosts:
+            if h.thinker:
+                return h.name
+        return self.coordinator
+
+    def local_broker_of(self, name: str) -> str:
+        """The broker a client on ``name`` dials: the host's own when it
+        runs one, else the coordinator.  Shared by the launcher's agent
+        wiring and ``connect`` so a brokerless host's clients always
+        have a valid local broker."""
+        return name if self.host(name).broker else self.coordinator
+
+    def host(self, name: str) -> HostSpec:
+        for h in self.hosts:
+            if h.name == name:
+                return h
+        raise KeyError(name)
+
+    def topics(self) -> List[str]:
+        seen = []
+        for h in self.hosts:
+            for t in h.pools:
+                if t not in seen:
+                    seen.append(t)
+        return seen
+
+    def pool_hosts(self, topic: str) -> List[str]:
+        """Hosts running a pool for ``topic``, in spec order -- each
+        pool's ``backup_hosts`` (cross-host straggler placement) is the
+        others."""
+        return [h.name for h in self.hosts if topic in h.pools]
+
+    # -- the partition -------------------------------------------------------
+
+    def partition(self) -> Dict[str, str]:
+        """Topic -> home broker host for every application topic, with
+        explicit overrides applied.  Default rule: the first host (spec
+        order) pooling the topic that also runs a broker; else the
+        coordinator.  Every broker and the launcher derive this from the
+        same spec, which is what makes the federation's routing
+        agreement total."""
+        part: Dict[str, str] = {}
+        for topic in self.topics():
+            home = None
+            for h in self.hosts:
+                if topic in h.pools and h.broker:
+                    home = h.name
+                    break
+            part[topic] = home or self.coordinator
+        part.update(self._overrides)
+        return part
+
+    def home_of(self, topic: str) -> str:
+        """Resolve any topic (application or generated pool channel) to
+        its home broker -- the same rule ``FederatedBroker.home``
+        applies frame by frame."""
+        return resolve_home(topic, self.partition(), self.broker_hosts)
+
+
+def resolve_home(topic: str, partition: Dict[str, str],
+                 broker_hosts: List[str]) -> str:
+    """Shared routing rule (spec side and broker side must never drift):
+    explicit partition entry first; then per-host pool channels
+    (``pool@<host>:...``, named by ``process_pool.dispatch_topic`` /
+    ``control_topic``) home at that host's broker when it has one;
+    everything else hashes deterministically over the broker hosts."""
+    from repro.core.process_pool import POOL_PREFIX
+    home = partition.get(topic)
+    if home is not None:
+        return home
+    if topic.startswith(POOL_PREFIX):
+        host = topic[len(POOL_PREFIX):].split(":", 1)[0]
+        if host in broker_hosts:
+            return host
+    return broker_hosts[host_hash_index(topic, len(broker_hosts))]

@@ -29,6 +29,23 @@ arbitrate via the broker's atomic ``claim`` op, so exactly one result per
 task id reaches the Thinker even though the racers live in different
 processes.
 
+Topology awareness: every pool carries a **host identity** (``host=``;
+defaults to the real hostname) that prefixes each worker identity and
+scopes the pool's dispatch/control channels (``pool@<host>:<topic>``),
+so in a multi-host federation worker <-> dispatch traffic stays on the
+worker's local broker.  ``backup_hosts`` names peer hosts running pools
+for the same topics: the straggler monitor then places backups on a
+*different host* than the original (round-robin over the peers) --
+surviving a whole-host slowdown, not just a slow process -- and falls
+back to the same-host exclude/bounce dance only when no peer exists.
+
+Long tasks and leases: each worker runs a heartbeat thread that renews
+the dispatch-channel lease at half its timeout while a task executes,
+so work that legitimately outlives ``lease_timeout`` keeps its lease
+instead of triggering a wasteful redelivery that the claim then has to
+dedup.  A SIGKILLed worker stops heartbeating, its lease expires, and
+the task redelivers -- exactly as before.
+
 Fault tolerance mirrors the thread server -- per-task retry with capped
 attempts, errors captured into the Result, one-shot Value-Server inputs
 released by the winning worker only -- and adds **exactly-once dispatch**
@@ -70,12 +87,47 @@ from repro.utils.timing import now
 
 _MAX_BOUNCES = 16       # prefer progress over placement after this many
 
+POOL_PREFIX = "pool@"
+
+
+def dispatch_topic(host: str, topic: str) -> str:
+    """The per-host pool dispatch channel for ``topic``.  In a
+    federation the ``pool@<host>:`` prefix homes the channel at that
+    host's broker (``cluster.spec.resolve_home``), keeping worker <->
+    dispatch traffic on-host; cross-host straggler backups target a
+    *peer* host's channel by the same naming."""
+    return f"{POOL_PREFIX}{host}:{topic}"
+
+
+def control_topic(host: str) -> str:
+    """Per-host pool control channel: each parent monitors only its own
+    workers' events (a shared control topic across hosts would race on
+    leases and split events randomly between monitors)."""
+    return f"{POOL_PREFIX}{host}:__control__"
+
+
+def host_of(identity: str) -> str:
+    """The host component of a worker identity (``host/topic/wR/pidP``)."""
+    return identity.split("/", 1)[0]
+
 
 class ProcessPoolTaskServer:
-    def __init__(self, queues: ColmenaQueues, *, workers_per_topic: int = 2,
+    def __init__(self, queues: ColmenaQueues, *, workers_per_topic=2,
                  straggler_factor: Optional[float] = None,
                  straggler_min_history: int = 5, intake_batch: int = 32,
-                 history_window: int = 4096):
+                 history_window: int = 4096,
+                 host: Optional[str] = None,
+                 backup_hosts: Optional[list] = None):
+        """workers_per_topic: an int (uniform) or a {topic: n} dict (a
+        cluster host runs only the pools its HostSpec lists, with
+        per-topic sizes).  host: this pool's host identity; None uses
+        the real hostname.  Simulated hosts sharing one machine pass
+        distinct names so placement decisions stay meaningful.
+        backup_hosts: peer hosts running pools for the same topics --
+        straggler backups prefer one of them over the original's host.
+        Either a flat list (every topic) or a {topic: [hosts]} dict (a
+        backup must only target a host that actually pools its topic,
+        or the backup envelope would sit in an undrained channel)."""
         if queues.backend != "proc":
             raise ValueError(
                 "ProcessPoolTaskServer requires ColmenaQueues(backend='proc')"
@@ -89,6 +141,10 @@ class ProcessPoolTaskServer:
         self.straggler_min_history = straggler_min_history
         self.intake_batch = intake_batch
         self._workers_per_topic = workers_per_topic
+        self.host = host or socketlib.gethostname()
+        self.backup_hosts = backup_hosts or []
+        self._backup_rr = 0                    # round-robin over peers
+        self.backup_targets: Dict[str, str] = {}  # task_id -> backup host
         self._methods: Dict[str, MethodSpec] = {}
         self._procs: list = []
         self._threads: list = []
@@ -114,11 +170,18 @@ class ProcessPoolTaskServer:
 
     # -- channels -------------------------------------------------------------
 
-    def _dispatch_channel(self, topic: str):
-        return self.queues.transport.channel(f"pool:{topic}", "tasks")
+    def _dispatch_channel(self, topic: str, host: Optional[str] = None):
+        return self.queues.transport.channel(
+            dispatch_topic(host or self.host, topic), "tasks")
 
     def _control_channel(self):
-        return self.queues.transport.channel("pool:__control__", "events")
+        return self.queues.transport.channel(control_topic(self.host),
+                                             "events")
+
+    def _n_workers(self, topic: str) -> int:
+        if isinstance(self._workers_per_topic, dict):
+            return self._workers_per_topic.get(topic, 0)
+        return self._workers_per_topic
 
     # -- lifecycle ------------------------------------------------------------
 
@@ -127,7 +190,9 @@ class ProcessPoolTaskServer:
         ctx = multiprocessing.get_context("fork")
         topics = self.queues.topics()
         for topic in topics:
-            for rank in range(self._workers_per_topic):
+            if self._n_workers(topic) == 0:
+                continue                    # this host does not pool it
+            for rank in range(self._n_workers(topic)):
                 p = ctx.Process(target=self._worker_main, args=(topic, rank),
                                 daemon=True, name=f"pool-{topic}-w{rank}")
                 p.start()
@@ -152,7 +217,7 @@ class ProcessPoolTaskServer:
         try:
             for topic in self.queues.topics():
                 ch = self._dispatch_channel(topic)
-                for _ in range(self._workers_per_topic):
+                for _ in range(self._n_workers(topic)):
                     ch.put(Envelope(now(), b"", {"stop": True}))
         except (ConnectionError, OSError):
             pass    # broker already dead: workers die with their sockets
@@ -271,20 +336,80 @@ class ProcessPoolTaskServer:
                 task: msg.Task = msg.deserialize(info["env"].data)
                 task.is_backup = True
                 task.exclude_worker = info["worker"]
+                # topology-aware placement: prefer a *different host* than
+                # the original's (a whole host can be the straggler --
+                # paper's Theta runs); round-robin over eligible peers.
+                # Fall back to this host's own channel, where the exclude
+                # bounce finds a different worker process.
+                origin = (host_of(info["worker"]) if info["worker"]
+                          else self.host)
+                eligible = (self.backup_hosts.get(info["topic"], [])
+                            if isinstance(self.backup_hosts, dict)
+                            else self.backup_hosts)
+                peers = [h for h in eligible
+                         if h != origin and h != self.host]
+                if peers:
+                    target = peers[self._backup_rr % len(peers)]
+                    self._backup_rr += 1
+                else:
+                    target = self.host
+                self.backup_targets[tid] = target
                 data = msg.serialize(task)
-                self._dispatch_channel(info["topic"]).put(Envelope(
-                    now(), data,
-                    {"input_size": len(data), "task_id": task.task_id}))
+                self._dispatch_channel(info["topic"], host=target).put(
+                    Envelope(now(), data,
+                             {"input_size": len(data),
+                              "task_id": task.task_id}))
 
     # -- worker side ----------------------------------------------------------
 
+    def _start_heartbeat(self, dispatch):
+        """Worker-side lease keepalive: one daemon thread per worker
+        process renews the dispatch lease under execution at half the
+        lease timeout, so tasks that legitimately outlive it are never
+        redelivered while their worker is demonstrably alive.  The main
+        loop publishes the lease id under ``hb_cond``; clearing it (task
+        finished) or replacing it (next task) retires the old renewal.
+        A SIGKILL stops the heartbeat with the process -- expiry-based
+        redelivery is untouched for real deaths."""
+        hb_cond = threading.Condition()
+        current = [None]
+        interval = max(self.queues.transport.lease_timeout / 2.0, 0.05)
+
+        def loop():
+            while True:
+                with hb_cond:
+                    while current[0] is None:
+                        hb_cond.wait()
+                    lid = current[0]
+                    hb_cond.wait(interval)
+                    still_running = current[0] == lid
+                if still_running:
+                    try:
+                        # renew from this thread's own connection: leases
+                        # are addressed (topic, kind, id), not per-socket.
+                        # False = too late (already expired): the claim on
+                        # the result put arbitrates, same as a straggler
+                        dispatch.renew(lid)
+                    except (ConnectionError, OSError, RuntimeError):
+                        pass                # broker gone: worker exits soon
+
+        threading.Thread(target=loop, daemon=True,
+                         name="pool-heartbeat").start()
+
+        def set_current(lid):
+            with hb_cond:
+                current[0] = lid
+                hb_cond.notify()
+
+        return set_current
+
     def _worker_main(self, topic: str, rank: int):
-        identity = (f"{socketlib.gethostname()}/{topic}/w{rank}"
-                    f"/pid{os.getpid()}")
+        identity = f"{self.host}/{topic}/w{rank}/pid{os.getpid()}"
         dispatch = self._dispatch_channel(topic)
         control = self._control_channel()
         queues = self.queues
         cache: dict = {}
+        set_hb = self._start_heartbeat(dispatch)
         while True:
             envs = dispatch.get_batch(1)
             if not envs:
@@ -308,7 +433,11 @@ class ProcessPoolTaskServer:
             control.put(Envelope(now(), pickle.dumps(
                 ("started", task.task_id, identity, task.topic, now())),
                 {}))
-            self._execute(task, identity, dispatch, control, cache)
+            set_hb(dispatch.held_lease())   # heartbeat across the execution
+            try:
+                self._execute(task, identity, dispatch, control, cache)
+            finally:
+                set_hb(None)
             # the task reached a terminal handoff (result published, retry
             # requeued, or duplicate swallowed by the claim): release the
             # dispatch lease.  The ack piggybacks on the next frame this

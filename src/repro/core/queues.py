@@ -63,7 +63,9 @@ class ColmenaQueues:
                  value_server=None,
                  proxy_threshold: Optional[int] = None,
                  release_inputs: bool = True,
-                 lease_timeout: Optional[float] = None):
+                 lease_timeout: Optional[float] = None,
+                 snapshot_every: float = 0.0,
+                 snapshot_path: str = ""):
         """backend: "local" (in-process deques) or "proc" (socket broker
         process); ignored when an explicit ``transport`` is given.
         release_inputs: delete one-shot proxied task inputs from the
@@ -72,12 +74,31 @@ class ColmenaQueues:
         completion, e.g. to resubmit the exact input payload.
         lease_timeout: seconds before an unacked delivery lease expires
         and its envelopes redeliver (None: the backend default).  Must
-        exceed the longest task execution; it also bounds how long a
-        resumed campaign waits before re-running work that was in flight
-        at the checkpoint."""
+        exceed the longest task execution *or* the consumer must renew
+        (pool workers heartbeat); it also bounds how long a resumed
+        campaign waits before re-running work that was in flight at the
+        checkpoint.
+        snapshot_every/snapshot_path (proc backend): the forked broker
+        auto-snapshots its whole state to ``snapshot_path`` every
+        ``snapshot_every`` seconds (atomic tmp+rename) -- long campaigns
+        get a crash-resumable file (``resume`` accepts it directly) with
+        no application checkpoint call."""
+        if transport is not None and snapshot_every:
+            raise ValueError(
+                "snapshot_every configures the broker the queues fork:"
+                " with an explicit transport, auto-snapshot is configured"
+                " where its broker is launched (ProcTransport/ClusterSpec"
+                " snapshot_every)")
         if transport is None:
             kw = {} if lease_timeout is None \
                 else {"lease_timeout": lease_timeout}
+            if snapshot_every:
+                if backend != "proc":
+                    raise ValueError(
+                        "snapshot_every is broker-side crash protection:"
+                        " it requires backend='proc'")
+                kw.update(snapshot_every=snapshot_every,
+                          snapshot_path=snapshot_path)
             transport = make_transport(backend, **kw)
         self.transport = transport
         self.backend = self.transport.name
@@ -88,6 +109,21 @@ class ColmenaQueues:
         self._active = 0
         self._lock = threading.Lock()
         self._all_done = threading.Condition(self._lock)
+
+    @classmethod
+    def connect(cls, topics: Iterable[str], address: tuple, *,
+                lease_timeout: Optional[float] = None,
+                **kwargs) -> "ColmenaQueues":
+        """Cluster-aware construction: attach to an existing broker --
+        a plain remote ``ProcTransport`` fabric or a federation member
+        bound by ``ClusterLauncher`` (``launcher.address_of(host)``).
+        Every queue/checkpoint/resume semantic is identical; topics
+        homed at other federation members are simply one relay hop
+        away."""
+        from repro.core.transport.proc import ProcTransport
+        kw = {} if lease_timeout is None else {"lease_timeout": lease_timeout}
+        return cls(topics, transport=ProcTransport(address=address, **kw),
+                   **kwargs)
 
     def topics(self):
         return list(self._topics)
@@ -142,13 +178,39 @@ class ColmenaQueues:
         """Read + validate a checkpoint file without restoring it, e.g.
         to inspect ``extra`` before constructing the fabric it
         configures.  Pass the returned payload to ``resume`` to avoid a
-        second read of the (potentially large) snapshot blob."""
+        second read of the (potentially large) snapshot blob.
+
+        Accepts two formats: an application checkpoint written by
+        ``checkpoint`` (transport snapshot + active count + extra), or a
+        **raw broker auto-snapshot** (single broker or a federation
+        bundle) written by the broker's ``snapshot_every`` timer.  A raw
+        snapshot has no application around to record the active count,
+        so it is *derived* from the captured envelopes and claim window
+        (``transport.base.derive_active``: ids whose completion was
+        already claimed-and-consumed are excluded, or a resumed
+        ``wait_until_done`` would wait on them forever) -- and ``extra``
+        is None (broker-side snapshots cannot capture Thinker progress;
+        applications that need ``extra`` keep calling ``checkpoint``)."""
+        from repro.core.transport.base import derive_active, load_snapshot
         with open(path, "rb") as f:
-            payload = pickle.load(f)
-        if payload.get("version") != 1:
-            raise ValueError(
-                f"unsupported checkpoint version {payload.get('version')!r}")
-        return payload
+            raw = f.read()
+        payload = pickle.loads(raw)
+        if isinstance(payload, dict) and "transport" in payload:
+            if payload.get("version") != 1:
+                raise ValueError("unsupported checkpoint version "
+                                 f"{payload.get('version')!r}")
+            return payload
+        if isinstance(payload, dict) and "fed_snapshot" in payload:
+            active = derive_active([load_snapshot(s)
+                                    for s in payload["hosts"].values()])
+            return {"version": 1, "transport": raw, "active": active,
+                    "extra": None}
+        if isinstance(payload, dict) and "queues" in payload:
+            return {"version": 1, "transport": raw,
+                    "active": derive_active([load_snapshot(raw)]),
+                    "extra": None}
+        raise ValueError(f"{path}: neither a checkpoint nor a broker "
+                         "snapshot")
 
     def resume(self, path: str, payload: Optional[dict] = None):
         """Restore a ``checkpoint`` into this (fresh) fabric and return
@@ -206,6 +268,8 @@ class ColmenaQueues:
         for name, seconds in env.meta.items():
             if name == "output_size":
                 result.output_size = seconds
+            elif name in ("task_id", "redelivered"):
+                pass                        # bookkeeping, not a timer
             else:
                 result.timer.record(name, seconds)
         result.timer.record("result_queue_transit", now() - env.t_put)
@@ -280,7 +344,7 @@ class ColmenaQueues:
         for name, seconds in env.meta.items():
             if name == "input_size":
                 task.input_size = seconds
-            elif name == "task_id":
+            elif name in ("task_id", "redelivered"):
                 pass                        # bookkeeping, not a timer
             else:
                 task.timer.record(name, seconds)
@@ -327,8 +391,10 @@ class ColmenaQueues:
                                       prefix="serialize_result",
                                       one_shot=True)
         data = msg.timed_serialize(result, result.timer, "serialize_result")
+        # task_id rides the meta (like requests) so a broker auto-snapshot
+        # can count a completed-but-unconsumed task as still active
         meta = {"serialize_result": result.timer.intervals["serialize_result"],
-                "output_size": len(data)}
+                "output_size": len(data), "task_id": result.task_id}
         return self._topics[result.topic].results.put(
             Envelope(now(), data, meta), claim=claim_id)
 

@@ -37,6 +37,56 @@ def load_snapshot(data: bytes) -> dict:
     return state
 
 
+def snapshot_id_sets(state: dict) -> tuple:
+    """(all_ids, result_ids, claimed_ids) of a parsed snapshot: every
+    task id riding an envelope meta (queued + leased), the subset found
+    on ``results``-kind queues, and the claim window.  Building blocks
+    of ``derive_active``."""
+    all_ids: set = set()
+    result_ids: set = set()
+    for _topic, kind, _epoch, items, leases in state["queues"]:
+        metas = [meta for _t, meta, _d in items]
+        for _lid, _dur, lease_items in leases:
+            metas.extend(meta for _t, meta, _d in lease_items)
+        for meta in metas:
+            tid = meta.get("task_id")
+            if tid is not None:
+                all_ids.add(tid)
+                if kind == "results":
+                    result_ids.add(tid)
+    return all_ids, result_ids, set(state["claims"]["order"])
+
+
+def derive_active(states: list) -> int:
+    """The still-unfinished task count of one or more parsed snapshots
+    (a federation contributes one per member; the sets must be unioned
+    *before* subtracting, because a stale envelope and the claim that
+    obsoletes it can live on different members).  This is how a
+    broker-side auto-snapshot, which has no application around to
+    record an active count, gets one derived at resume time.
+
+    Not every captured envelope is live work: a worker acks its
+    dispatch lease only after publishing (the ack may still be
+    piggyback-pending when the snapshot fires), so a snapshot can image
+    a lease for a task whose result was already consumed.  Counting it
+    would make a resumed ``wait_until_done`` hang forever -- the
+    redelivered re-execution loses the restored claim and never
+    delivers.  The tell: the id is **claimed but no result envelope is
+    queued anywhere** (the claim is fused with the result enqueue, so
+    claimed-and-absent means consumed).  Such ids are excluded; their
+    stale envelopes redeliver, re-execute, and are swallowed by the
+    claim window, exactly as in a live fabric."""
+    all_ids: set = set()
+    result_ids: set = set()
+    claimed: set = set()
+    for state in states:
+        a, r, c = snapshot_id_sets(state)
+        all_ids |= a
+        result_ids |= r
+        claimed |= c
+    return len(all_ids - (claimed - result_ids))
+
+
 class BoundedIdSet:
     """Insertion-ordered set with a capacity cap (oldest ids age out one
     at a time).  Shared by the Task Server's straggler dedup window and
@@ -166,6 +216,24 @@ class Channel:
         redelivered.  Normally the ack piggybacks on the next outgoing
         frame (zero extra round-trips); ``flush=True`` forces it onto
         the wire immediately (e.g. right before a worker exits)."""
+        raise NotImplementedError
+
+    def held_lease(self) -> Optional[int]:
+        """The lease id of this thread's last unacked ``get_batch``
+        (None when nothing is held).  Consumers that execute for longer
+        than ``lease_timeout`` read it here to hand to a heartbeat
+        thread that keeps the lease alive via ``renew``."""
+        raise NotImplementedError
+
+    def renew(self, lease_id: Optional[int] = None) -> bool:
+        """Extend a lease's expiry by another full ``lease_timeout``
+        from now.  ``lease_id=None`` renews the calling thread's held
+        lease.  Returns False when the lease no longer exists (already
+        acked, or expired and redelivered -- too late: the renewal lost
+        the race, and the claim fused into the result publish is what
+        dedups the re-execution).  Long-running consumers renew at
+        roughly half the lease timeout so tasks that legitimately
+        outlive it never trigger a wasteful redelivery."""
         raise NotImplementedError
 
     def wake(self) -> None:

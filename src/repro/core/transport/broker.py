@@ -192,6 +192,22 @@ class Broker:
         with q.cond:
             q.leases.pop(lease_id, None)    # already expired: no-op
 
+    def renew(self, topic: str, kind: str, lease_id: int) -> bool:
+        """Push a live lease's deadline out by another full duration.
+        False = the lease is gone (acked, or expired and requeued): the
+        renewal lost the race and the holder's eventual completion will
+        arbitrate through the claim like any straggler backup.  Getters
+        parked against the old deadline simply wake, find nothing
+        expired, and re-bound against the new one."""
+        q = self._queue(topic, kind)
+        with q.cond:
+            lease = q.leases.get(lease_id)
+            if lease is None:
+                return False
+            dur, _, items = lease
+            q.leases[lease_id] = (dur, now() + dur, items)
+            return True
+
     def wake(self) -> None:
         with self._qlock:
             queues = list(self._queues.values())
@@ -290,6 +306,9 @@ class Broker:
                     "lease": lease}, b"".join(blobs)
         if op == "ack":                     # explicit flush (rare path)
             return {"ok": True}, b""
+        if op == "renew":
+            ok = self.renew(header["topic"], header["kind"], header["lease"])
+            return {"ok": ok}, b""
         if op == "wake":
             self.wake()
             return {"ok": True}, b""
@@ -309,8 +328,41 @@ class Broker:
         return {"error": f"unknown op {op!r}"}, b""
 
 
-def broker_main(sock) -> None:
+def start_autosnapshot(snapshot_fn, every: float, path: str,
+                       stop: threading.Event) -> threading.Thread:
+    """Periodic broker-side crash protection: every ``every`` seconds,
+    write ``snapshot_fn()`` to ``path`` atomically (tmp + rename, so a
+    kill mid-write leaves the previous image intact).  Campaigns get a
+    resumable file without any application-level checkpoint call --
+    ``ColmenaQueues.load_checkpoint`` recognizes the raw snapshot format
+    and derives the active-task count from the envelope metas.  A failed
+    write is logged-by-omission (the next tick retries); it must never
+    take the broker down with it."""
+    import os
+
+    def loop():
+        while not stop.wait(every):
+            try:
+                data = snapshot_fn()
+                tmp = path + ".tmp"
+                with open(tmp, "wb") as f:
+                    f.write(data)
+                os.replace(tmp, path)
+            except Exception:               # noqa: BLE001
+                pass
+
+    th = threading.Thread(target=loop, daemon=True, name="broker-autosnap")
+    th.start()
+    return th
+
+
+def broker_main(sock, snapshot_every: float = 0.0,
+                snapshot_path: Optional[str] = None) -> None:
     """Entry point of the broker process (listening socket inherited from
     the parent fork)."""
     broker = Broker()
-    frames.serve_forever(sock, broker.handle, threading.Event())
+    stop = threading.Event()
+    if snapshot_every and snapshot_path:
+        start_autosnapshot(broker.snapshot, snapshot_every, snapshot_path,
+                           stop)
+    frames.serve_forever(sock, broker.handle, stop)

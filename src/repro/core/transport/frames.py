@@ -63,10 +63,13 @@ def recv_frame(sock: socket.socket) -> Tuple[dict, bytes]:
 # ---------------------------------------------------------------------------
 
 
-def make_server_socket(path_hint: str) -> Tuple[socket.socket, tuple]:
+def make_server_socket(path_hint: str, tcp: bool = False,
+                       host: str = "127.0.0.1") -> Tuple[socket.socket, tuple]:
     """Bind a listening socket; returns (sock, address) where address is
-    ("unix", path) or ("tcp", host, port)."""
-    if hasattr(socket, "AF_UNIX"):
+    ("unix", path) or ("tcp", host, port).  ``tcp=True`` skips the
+    Unix-domain preference -- cluster deployments need an address a
+    process on another (possibly simulated) host can dial."""
+    if not tcp and hasattr(socket, "AF_UNIX"):
         sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
         try:
             sock.bind(path_hint)
@@ -76,9 +79,9 @@ def make_server_socket(path_hint: str) -> Tuple[socket.socket, tuple]:
             sock.close()
     sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-    sock.bind(("127.0.0.1", 0))
+    sock.bind((host, 0))
     sock.listen(128)
-    return sock, ("tcp", "127.0.0.1", sock.getsockname()[1])
+    return sock, ("tcp", host, sock.getsockname()[1])
 
 
 def connect(address: tuple) -> socket.socket:
@@ -190,7 +193,7 @@ def serve_forever(sock: socket.socket,
                         if sock.family == getattr(socket, "AF_UNIX", None):
                             connect(("unix", connect_addr)).close()
                         else:
-                            connect(("tcp", "127.0.0.1",
+                            connect(("tcp", connect_addr[0],
                                      connect_addr[1])).close()
                     except OSError:
                         pass

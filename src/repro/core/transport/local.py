@@ -134,6 +134,21 @@ class LocalChannel(Channel):
         with self._cond:
             self._leases.pop(held, None)      # already expired: no-op
 
+    def held_lease(self) -> Optional[int]:
+        return getattr(self._tls, "held", None)
+
+    def renew(self, lease_id: Optional[int] = None) -> bool:
+        lid = lease_id if lease_id is not None else self.held_lease()
+        if lid is None:
+            return False
+        with self._cond:
+            lease = self._leases.get(lid)
+            if lease is None:
+                return False                  # acked or already expired
+            dur, _, envs = lease
+            self._leases[lid] = (dur, now() + dur, envs)
+            return True
+
     def wake(self) -> None:
         with self._cond:
             self.epoch += 1

@@ -102,6 +102,23 @@ class ProcChannel(Channel):
         if flush:
             self._t.flush_acks()
 
+    def held_lease(self) -> Optional[int]:
+        return getattr(self._tls, "held", None)
+
+    def renew(self, lease_id: Optional[int] = None) -> bool:
+        """Heartbeat a lease (the holder's, or an explicit id handed to
+        a heartbeat thread -- leases are addressed by (topic, kind, id),
+        so any thread's connection can renew them).  Deliberately not
+        retried: a renew that died on the wire just means the next
+        heartbeat tick renews a little later."""
+        lid = lease_id if lease_id is not None else self.held_lease()
+        if lid is None:
+            return False
+        header, _ = self._t.request(
+            {"op": "renew", "topic": self.topic, "kind": self.kind,
+             "lease": lid})
+        return header["ok"]
+
     def wake(self) -> None:
         self._t.wake_all()
 
@@ -118,12 +135,20 @@ class ProcTransport(Transport):
     name = "proc"
 
     def __init__(self, address: Optional[tuple] = None,
-                 lease_timeout: float = 30.0):
+                 lease_timeout: float = 30.0,
+                 snapshot_every: float = 0.0,
+                 snapshot_path: Optional[str] = None):
         """address: connect to an existing broker (another process's
-        fabric); None forks a fresh broker owned by this transport.
+        fabric, or a cluster launcher's per-host federated broker); None
+        forks a fresh broker owned by this transport.
         lease_timeout: seconds before an unacked get lease expires and
         its envelopes are redelivered; must exceed the longest consumer
-        hold (a pool worker holds its lease for the task's execution)."""
+        hold (a pool worker holds its lease for the task's execution)
+        unless that consumer heartbeats via ``Channel.renew``.
+        snapshot_every/snapshot_path: broker-side periodic auto-snapshot
+        (atomic tmp+rename) -- crash protection with no application
+        checkpoint call; only valid when this transport forks the
+        broker (a remote broker configures its own)."""
         self._proc = None
         self._dir = None
         self._owner_pid = os.getpid()
@@ -134,11 +159,18 @@ class ProcTransport(Transport):
             self._dir = tempfile.mkdtemp(prefix="colmena-broker-")
             sock, address = frames.make_server_socket(
                 os.path.join(self._dir, "broker.sock"))
-            self._proc = _mp.Process(target=broker_main, args=(sock,),
-                                     daemon=True, name="colmena-broker")
+            self._proc = _mp.Process(
+                target=broker_main,
+                args=(sock, snapshot_every, snapshot_path),
+                daemon=True, name="colmena-broker")
             self._proc.start()
             sock.close()                    # the broker child owns it now
             atexit.register(self.close)
+        elif snapshot_every:
+            raise ValueError(
+                "snapshot_every configures the broker this transport forks;"
+                " a remote broker's auto-snapshot is configured where it is"
+                " launched (ClusterSpec.snapshot_every)")
         self.address = address
         self.client = frames.FrameClient(address)
 

@@ -147,6 +147,27 @@ class ShardedValueServer:
         self._resolver_pid = None
         atexit.register(self.shutdown)
 
+    @classmethod
+    def connect(cls, addresses: List[tuple],
+                vnodes: int = 64) -> "ShardedValueServer":
+        """Attach to already-running shard processes (a cluster
+        launcher's) instead of spawning them.  Every client must pass
+        the same ordered address list: the consistent-hash ring is
+        positional, so an agreed order is what makes two clients route
+        a key to the same shard.  ``shutdown`` on a connected client is
+        a no-op -- the launcher owns the shard processes."""
+        assert addresses, "connect() needs at least one shard address"
+        self = cls.__new__(cls)
+        self.num_shards = len(addresses)
+        self._dir = None
+        self._owner_pid = None              # not ours to shut down
+        self._procs = []
+        self._clients = [frames.FrameClient(tuple(a)) for a in addresses]
+        self._ring = HashRing(self.num_shards, vnodes=vnodes)
+        self._resolver = None
+        self._resolver_pid = None
+        return self
+
     def shard_of(self, key: str) -> int:
         return self._ring.node(key)
 

@@ -25,6 +25,16 @@ spilling something else to make room).  This turns ``capacity_bytes`` from
 a destructive bound into a working-set bound, which is what the sharded
 deployment (``transport.shards``) runs per shard.
 
+Spill I/O is **staged outside the store lock**: a fault-in (or eviction
+write) marks its key in-flight, releases the lock for the ~ms disk
+read/write, and re-acquires it only to publish the entry -- so a shard
+thrashing its capacity bound no longer serializes every unrelated
+``get``/``put`` behind the disk.  Any operation touching an in-flight key
+waits on the store condition until the marker clears, which keeps the
+per-key linearizability the locked implementation had (a concurrent
+``get`` of a key mid-spill waits and then faults it back; it can never
+observe the key missing).
+
 TPU adaptation note (DESIGN.md §2): on a real pod the store holds
 device-resident jax.Arrays and resolution is a device-to-device copy; in
 this container the store is an in-process dict with a configurable
@@ -64,6 +74,10 @@ class ValueServer:
         fault back in on ``get`` instead of being discarded."""
         self._store: "OrderedDict[str, _Entry]" = OrderedDict()
         self._lock = threading.Lock()
+        # notified whenever a key's in-flight spill I/O marker clears;
+        # shares the store lock so `with self._lock` sections compose
+        self._io_done = threading.Condition(self._lock)
+        self._io_keys: set = set()          # keys with staged disk I/O
         self._resolver = ThreadPoolExecutor(max_workers=4,
                                             thread_name_prefix="vs-resolve")
         self.fetch_bandwidth = fetch_bandwidth
@@ -77,6 +91,14 @@ class ValueServer:
                       "evictions": 0, "deletes": 0, "spills": 0,
                       "spill_hits": 0}
 
+    def _await_key_locked(self, key: str) -> None:
+        """Block (lock held, released while waiting) until no staged
+        spill I/O is in flight for ``key`` -- afterwards the key is back
+        in exactly one of the two tiers and the caller can proceed as if
+        the I/O had happened atomically."""
+        while key in self._io_keys:
+            self._io_done.wait()
+
     def put(self, value, *, size: Optional[int] = None, refs: int = 0,
             key: Optional[str] = None) -> str:
         """key: adopt a caller-minted key (the sharded deployment mints
@@ -85,22 +107,55 @@ class ValueServer:
         if size is None:
             size = len(pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL))
         with self._lock:
+            self._await_key_locked(key)
             self._store[key] = _Entry(value, size, refs)
             self._bytes += size
             self.stats["puts"] += 1
             self.stats["bytes_put"] += size
-            self._evict_locked(protect=key)
+        # capacity enforcement happens after the insert is published: the
+        # store can transiently exceed the bound by one entry while the
+        # eviction writes its spill file outside the lock
+        self._evict(protect=key)
         return key
 
     def get(self, key: str):
+        entry = None
         with self._lock:
+            self._await_key_locked(key)
             entry = self._store.get(key)
-            if entry is None:
-                entry = self._fault_in_locked(key)
-            self._store.move_to_end(key)
-            self.stats["gets"] += 1
-            self.stats["bytes_get"] += entry.size
-            value, size = entry.value, entry.size
+            if entry is not None:
+                self._store.move_to_end(key)
+                self.stats["gets"] += 1
+                self.stats["bytes_get"] += entry.size
+                value, size = entry.value, entry.size
+            else:
+                if key not in self._spilled:
+                    raise KeyError(key)
+                # stage the fault-in: claim the key, drop the lock for
+                # the disk read, publish the entry on re-acquire --
+                # unrelated ops proceed during the read; ops on THIS key
+                # wait on the in-flight marker
+                size, refs = self._spilled.pop(key)
+                self._io_keys.add(key)
+        if entry is None:
+            try:
+                value = self._read_spill(key)
+            except BaseException:
+                with self._lock:            # undo the claim: still spilled
+                    self._spilled[key] = [size, refs]
+                    self._io_keys.discard(key)
+                    self._io_done.notify_all()
+                raise
+            self._remove_spill_file(key)
+            with self._lock:
+                self._store[key] = _Entry(value, size, refs)
+                self._bytes += size
+                self.stats["spill_hits"] += 1
+                self.stats["gets"] += 1
+                self.stats["bytes_get"] += size
+                self._io_keys.discard(key)
+                self._io_done.notify_all()
+            self._evict(protect=key)        # may spill something else
         if self.fetch_bandwidth:
             import time
             time.sleep(size / self.fetch_bandwidth)
@@ -108,6 +163,7 @@ class ValueServer:
 
     def size_of(self, key: str) -> int:
         with self._lock:
+            self._await_key_locked(key)
             if key in self._spilled:
                 return self._spilled[key][0]
             return self._store[key].size
@@ -116,6 +172,7 @@ class ValueServer:
 
     def add_ref(self, key: str) -> None:
         with self._lock:
+            self._await_key_locked(key)
             spilled = self._spilled.get(key)
             if spilled is not None and key not in self._store:
                 # pure metadata update: no reason to pay the disk fault-in
@@ -129,6 +186,7 @@ class ValueServer:
         """Drop one reference; delete the entry once unreferenced.
         Returns True if the entry was deleted (missing keys are a no-op)."""
         with self._lock:
+            self._await_key_locked(key)
             entry = self._store.get(key)
             if entry is None:
                 spilled = self._spilled.get(key)
@@ -151,6 +209,7 @@ class ValueServer:
 
     def delete(self, key: str) -> None:
         with self._lock:
+            self._await_key_locked(key)
             entry = self._store.pop(key, None)
             if entry is not None:
                 self._bytes -= entry.size
@@ -168,44 +227,54 @@ class ValueServer:
         except OSError:
             pass
 
-    def _fault_in_locked(self, key: str) -> _Entry:
-        """Reload a spilled entry into the memory tier (byte-identical);
-        raises KeyError if the key was never stored.
-
-        Spill I/O (here and in ``_evict_locked``) runs under the store
-        lock: correct and simple, at the cost of serializing concurrent
-        ops behind ~ms disk reads when the working set thrashes the
-        capacity bound.  Staging the file I/O outside the lock (per-key
-        in-flight markers) is the known next step if a shard's profile
-        ever shows lock contention here (see ROADMAP)."""
-        size, refs = self._spilled.pop(key)  # KeyError -> genuinely missing
+    def _read_spill(self, key: str):
+        """One spill-file read; factored out so tests can slow it down
+        to observe that staged I/O no longer blocks unrelated ops."""
         with open(self._spill_path(key), "rb") as f:
-            value = pickle.loads(f.read())
-        self._remove_spill_file(key)
-        entry = _Entry(value, size, refs)
-        self._store[key] = entry
-        self._bytes += size
-        self.stats["spill_hits"] += 1
-        self._evict_locked(protect=key)     # may spill something else
-        return entry
+            return pickle.loads(f.read())
 
-    def _evict_locked(self, protect: Optional[str] = None) -> None:
+    def _write_spill(self, key: str, value) -> None:
+        with open(self._spill_path(key), "wb") as f:
+            f.write(pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL))
+
+    def _evict(self, protect: Optional[str] = None) -> None:
+        """Bring the memory tier back under ``capacity_bytes``.  Victims
+        are chosen and unlinked from the store under the lock; the spill
+        *write* happens outside it with the victim's in-flight marker
+        set, so concurrent ops on other keys never queue behind the
+        disk.  Re-checked per iteration: concurrent evictors cannot pick
+        the same victim (the pop removes it before the lock drops)."""
         if self.capacity_bytes is None:
             return
-        while self._bytes > self.capacity_bytes:
-            victim = next((k for k, e in self._store.items()
-                           if e.refs <= 0 and k != protect), None)
-            if victim is None:
-                return                      # everything left is pinned
-            entry = self._store.pop(victim)
-            self._bytes -= entry.size
-            self.stats["evictions"] += 1
-            if self.spill_dir is not None:
-                with open(self._spill_path(victim), "wb") as f:
-                    f.write(pickle.dumps(entry.value,
-                                         protocol=pickle.HIGHEST_PROTOCOL))
+        while True:
+            with self._lock:
+                if self._bytes <= self.capacity_bytes:
+                    return
+                victim = next((k for k, e in self._store.items()
+                               if e.refs <= 0 and k != protect), None)
+                if victim is None:
+                    return                  # everything left is pinned
+                entry = self._store.pop(victim)
+                self._bytes -= entry.size
+                self.stats["evictions"] += 1
+                if self.spill_dir is None:
+                    continue                # destructive bound: discarded
+                self._io_keys.add(victim)
+            try:
+                self._write_spill(victim, entry.value)
+            except BaseException:
+                with self._lock:            # failed write: keep it resident
+                    self._store[victim] = entry
+                    self._bytes += entry.size
+                    self.stats["evictions"] -= 1
+                    self._io_keys.discard(victim)
+                    self._io_done.notify_all()
+                raise
+            with self._lock:
                 self._spilled[victim] = [entry.size, 0]
                 self.stats["spills"] += 1
+                self._io_keys.discard(victim)
+                self._io_done.notify_all()
 
     @property
     def total_bytes(self) -> int:
@@ -223,6 +292,7 @@ class ValueServer:
 
     def __contains__(self, key: str) -> bool:
         with self._lock:
+            self._await_key_locked(key)
             return key in self._store or key in self._spilled
 
     def prefetch(self, key: str) -> Future:

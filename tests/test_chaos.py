@@ -86,6 +86,78 @@ def test_next_get_commits_previous_lease(make_transport_fixture):
     assert ch.get(timeout=1.0) is None      # neither ever redelivers
 
 
+def test_lease_renewal_outlives_timeout(make_transport_fixture):
+    """A consumer that legitimately outlives lease_timeout keeps its
+    lease via renew -- no redelivery while it heartbeats, normal ack
+    afterwards."""
+    t = make_transport_fixture(lease_timeout=0.4)
+    ch = t.channel("t", "requests")
+    ch.put(Envelope(now(), b"long-task", {"task_id": "a"}))
+    lease = []
+    done = threading.Event()
+
+    def consume():
+        got = ch.get_batch(1, timeout=2)
+        assert len(got) == 1
+        lease.append(ch.held_lease())
+        done.wait(3)                         # "executing": holds the lease
+        ch.ack(flush=True)
+
+    th = threading.Thread(target=consume)
+    th.start()
+    deadline = now() + 1.3                   # > 3x the lease timeout
+    while now() < deadline:
+        time.sleep(0.15)
+        if lease:
+            # renewed from a *different* thread, by explicit id -- the
+            # worker-heartbeat topology
+            assert ch.renew(lease[0]) is True
+    assert ch.get(timeout=0.2) is None       # never redelivered meanwhile
+    done.set()
+    th.join()
+    assert ch.get(timeout=0.6) is None       # acked: gone for good
+
+
+def test_renew_after_expiry_reports_too_late(make_transport_fixture):
+    t = make_transport_fixture(lease_timeout=0.3)
+    ch = t.channel("t", "requests")
+    ch.put(Envelope(now(), b"x", {}))
+    got = _get_in_dead_thread(ch)
+    assert len(got) == 1
+    env = ch.get(timeout=3)                  # expiry ran: redelivered
+    assert env is not None and env.meta["redelivered"] == 1
+    # the original (dead) holder's lease id was 0; renewing it now fails
+    assert ch.renew(0) is False
+    ch.ack(flush=True)
+
+
+def test_pool_worker_heartbeat_keeps_long_task(tmp_path):
+    """End to end: a task 4x longer than lease_timeout runs exactly once
+    -- the worker's heartbeat renews the dispatch lease, so the broker
+    never redelivers it (before heartbeats, this burned a full duplicate
+    execution that only claim-dedup cleaned up)."""
+    queues = ColmenaQueues(["t"], backend="proc", lease_timeout=0.5)
+    pool = ProcessPoolTaskServer(queues, workers_per_topic=2)
+
+    def long_task(x):
+        time.sleep(2.0)
+        return (os.getpid(), x)
+
+    pool.register(long_task, name="t")
+    try:
+        with pool:
+            tid = queues.send_task(5, method="t", topic="t")
+            r = queues.get_result("t", timeout=30)
+            assert r is not None and r.success
+            assert r.value[1] == 5
+            # exactly one execution: one started event, no redelivery
+            assert len(pool.task_history.get(tid, [])) == 1
+            assert queues.get_result("t", timeout=1.0) is None
+            assert queues.active_count == 0
+    finally:
+        queues.shutdown()
+
+
 def test_put_with_claim_publishes_exactly_once(make_transport_fixture):
     t = make_transport_fixture()
     ch = t.channel("t", "results")
