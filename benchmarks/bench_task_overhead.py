@@ -9,6 +9,28 @@ COMPONENTS = ("serialize_request", "request_queue_transit",
               "deserialize_result", "proxy_put")
 
 
+def _d0_rows(T: int, N: int):
+    """True zero-length tasks with small inputs: measures the dispatch
+    floor of the fabric itself (polling loops would show up here).  The
+    backend dimension tracks the cross-process transport overhead
+    trajectory: "local" is thread workers on in-process queues, "proc"
+    is the paper's topology (broker-backed socket queues + worker OS
+    processes).  Shared by the full run and the CI quick subset so the
+    row names the bench-smoke gate matches on can never drift between
+    them."""
+    rows = []
+    for backend in ("local", "proc"):
+        res = run_synapp(SynConfig(T=T, D=0.0, I=1 << 10, O=0, N=N,
+                                   use_value_server=False, backend=backend))
+        suffix = "" if backend == "local" else f"[{backend}]"
+        rows.append((f"d0_per_task_wall{suffix}",
+                     res["per_task_wall"] * 1e6, f"n={res['n_results']}"))
+        rows.append((f"d0_total_overhead{suffix}",
+                     res["total_overhead_median"] * 1e6,
+                     f"median lifecycle overhead at D=0, {backend} backend"))
+    return rows
+
+
 def run(T: int = 200, I: int = 1 << 20, N: int = 8, D: float = 0.005):
     """D is near-zero (paper: zero-length tasks) but non-zero so the
     single-CPU consumer thread keeps up and queue *waiting* (a container
@@ -30,20 +52,7 @@ def run(T: int = 200, I: int = 1 << 20, N: int = 8, D: float = 0.005):
     vs = [r for r in rows if r[0] == "fig5_vs_total_overhead"][0][1]
     rows.append(("fig5_vs_improvement_pct", 100.0 * (novs - vs) / novs,
                  "expect >0 at 1MB"))
-    # true zero-length tasks with small inputs: measures the dispatch floor
-    # of the fabric itself (polling loops would show up here).  The backend
-    # dimension tracks the cross-process transport overhead trajectory:
-    # "local" is thread workers on in-process queues, "proc" is the paper's
-    # topology (broker-backed socket queues + worker OS processes).
-    for backend in ("local", "proc"):
-        res = run_synapp(SynConfig(T=T, D=0.0, I=1 << 10, O=0, N=N,
-                                   use_value_server=False, backend=backend))
-        suffix = "" if backend == "local" else f"[{backend}]"
-        rows.append((f"d0_per_task_wall{suffix}",
-                     res["per_task_wall"] * 1e6, f"n={res['n_results']}"))
-        rows.append((f"d0_total_overhead{suffix}",
-                     res["total_overhead_median"] * 1e6,
-                     f"median lifecycle overhead at D=0, {backend} backend"))
+    rows.extend(_d0_rows(T, N))
     # cluster federation: same D=0 run, but the Thinker's local broker is
     # NOT the topic's home (pools live on the other simulated host), so
     # every submission and result crosses exactly one relay hop.  The
@@ -101,6 +110,59 @@ def run_checkpoint_bench(n_envs: int = 500, env_bytes: int = 2048):
             ("ckpt_restore_ms", t_restore * 1e3, note)]
 
 
-if __name__ == "__main__":
-    for name, val, extra in run():
+def run_quick(T: int = 100, N: int = 8):
+    """The CI smoke subset: just the D=0 dispatch-floor rows on both
+    backends (the rows the 10 ms acceptance bound gates), skipping the
+    fig5 / cluster / checkpoint sweeps that need a quiet machine to be
+    meaningful."""
+    return _d0_rows(T, N)
+
+
+def main(argv=None) -> int:
+    """CLI for the CI bench-smoke job: run (optionally just the quick
+    D=0 subset), write the rows as JSON, and fail when the local-backend
+    dispatch floor exceeds the acceptance bound -- the first automated
+    guard on the perf trajectory."""
+    import argparse
+    import json
+
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("-T", type=int, default=None,
+                   help="tasks per config (default: 100 quick, 200 full --"
+                        " the full default must track run()'s so bare"
+                        " invocations stay comparable across PRs)")
+    p.add_argument("--quick", action="store_true",
+                   help="only the D=0 rows on both backends")
+    p.add_argument("--json", default="", metavar="PATH",
+                   help="also write rows as JSON (name -> {value_us, note})")
+    p.add_argument("--max-d0-local-ms", type=float, default=0.0,
+                   metavar="MS",
+                   help="fail (exit 1) if d0_per_task_wall exceeds this")
+    args = p.parse_args(argv)
+    if args.quick:
+        rows = run_quick(**({} if args.T is None else {"T": args.T}))
+    else:
+        rows = run(**({} if args.T is None else {"T": args.T}))
+    for name, val, extra in rows:
         print(f"{name},{val:.1f},{extra}")
+    if args.json:
+        # neutral "value": most rows are microseconds, but full runs
+        # include e.g. fig5_vs_improvement_pct -- a unit-bearing key
+        # would mislabel those for artifact consumers
+        with open(args.json, "w") as f:
+            json.dump({name: {"value": val, "note": extra}
+                       for name, val, extra in rows}, f, indent=2)
+    if args.max_d0_local_ms:
+        d0_us = next(v for n, v, _ in rows if n == "d0_per_task_wall")
+        bound_us = args.max_d0_local_ms * 1e3
+        if d0_us > bound_us:
+            print(f"FAIL: d0_per_task_wall {d0_us:.0f}us exceeds the "
+                  f"{args.max_d0_local_ms:.1f}ms acceptance bound")
+            return 1
+        print(f"OK: d0_per_task_wall {d0_us:.0f}us within "
+              f"{args.max_d0_local_ms:.1f}ms")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,16 +7,20 @@ each {T, D, I, O, N} configuration (Figs. 5, 6, 9).
 
 SynApp doubles as the checkpoint/resume demo: with
 ``checkpoint_every=K`` the Thinker writes a fabric checkpoint (queued +
-in-flight envelopes, claim window, Thinker progress, the full config)
-every K results, and ``run_synapp(cfg, resume_from=path)`` continues a
-``kill -9``'d run from the last checkpoint without resubmitting
-completed work (checkpointing requires ``--no-value-server``: VS shard
-contents die with the incarnation and are outside the fabric
-checkpoint's scope)::
+in-flight envelopes, claim window, Value Server contents, Thinker
+progress, the full config) every K results, and
+``run_synapp(cfg, resume_from=path)`` continues a ``kill -9``'d run from
+the last checkpoint without resubmitting completed work.  The Value
+Server may stay enabled: its snapshot travels inside the checkpoint, so
+restored task/result proxies resolve in the new incarnation.  The same
+works at cluster scale -- the transport snapshot becomes a federation
+bundle and the VS snapshot spans the shard ring::
 
     PYTHONPATH=src python -m repro.apps.synapp --backend proc -T 200 \
-        -D 0.05 --no-value-server --checkpoint-every 25 --ckpt /tmp/syn.ckpt
-    # kill -9 it mid-run, then:
+        -D 0.05 --checkpoint-every 25 --ckpt /tmp/syn.ckpt
+    PYTHONPATH=src python -m repro.apps.synapp --cluster 2 -T 200 \
+        -D 0.05 --vs-replicas 2 --checkpoint-every 25 --ckpt /tmp/syn.ckpt
+    # kill -9 either mid-run, then:
     PYTHONPATH=src python -m repro.apps.synapp --resume /tmp/syn.ckpt
 """
 from __future__ import annotations
@@ -47,6 +51,8 @@ class SynConfig:
                                  # processes + sharded socket Value Server
                                  # (the paper's multi-process topology)
     vs_shards: int = 2           # Value Server shards on the proc backend
+    vs_replicas: int = 1         # copies of every VS key on the shard ring
+                                 # (>=2 survives a shard/node loss)
     cluster_hosts: int = 0       # >=2: the multi-host topology -- that many
                                  # simulated hosts over TCP, each a federated
                                  # broker + worker pool (workers split across
@@ -171,12 +177,19 @@ def _cluster_spec(cfg: SynConfig):
                              else {}),
                       vs_shards=shards.get(i, 0))
              for i in range(k)]
-    return ClusterSpec(hosts, lease_timeout=cfg.lease_timeout)
+    return ClusterSpec(hosts, lease_timeout=cfg.lease_timeout,
+                       vs_replicas=(cfg.vs_replicas if cfg.use_value_server
+                                    else 1))
 
 
-def _run_cluster(cfg: SynConfig, progress):
+def _run_cluster(cfg: SynConfig, progress, resume_from: str = "",
+                 ckpt_payload=None):
     """Materialize the spec, attach the Thinker to its host's broker,
-    and run the campaign across the simulated hosts."""
+    and run the campaign across the simulated hosts.  ``resume_from``
+    restores the federation bundle + Value Server snapshot into the
+    fresh cluster before the Thinker starts submitting (host names are
+    derived from the config, so the restored per-member cuts land on
+    their namesakes)."""
     from repro.core.cluster import ClusterLauncher
     threshold = cfg.proxy_threshold if cfg.use_value_server else None
     launcher = ClusterLauncher(
@@ -189,6 +202,9 @@ def _run_cluster(cfg: SynConfig, progress):
         queues = launcher.connect(["syntask"], value_server=vs,
                                   proxy_threshold=threshold)
         try:
+            if resume_from:
+                progress = queues.resume(resume_from, payload=ckpt_payload)
+                cfg.T = progress.get("T", cfg.T)
             thinker = SynThinker(queues, cfg,
                                  submitted=progress["submitted"],
                                  completed=progress["completed"])
@@ -217,32 +233,25 @@ def run_synapp(cfg: SynConfig, resume_from: str = ""):
         raise ValueError("checkpoint_every is set but checkpoint_path is "
                          "empty -- the first checkpoint would fail inside "
                          "the consumer thread and hang the run")
-    if (cfg.checkpoint_every or resume_from) and cfg.use_value_server:
-        # proxied payloads reference Value Server shards that die with the
-        # incarnation; VS state is outside the queue checkpoint's scope
-        # (durable / replicated shards are a roadmap item), so a resumed
-        # run could never resolve them -- fail fast instead of hanging
-        raise ValueError("checkpointing requires use_value_server=False: "
-                         "Value Server contents are not captured by the "
-                         "fabric checkpoint, so restored task proxies "
-                         "would dangle")
     if cfg.cluster_hosts:
         if cfg.cluster_hosts < 2:
             raise ValueError("cluster_hosts simulates a multi-host fabric:"
                              " use >= 2 (or 0 for single-host backends)")
-        if cfg.checkpoint_every or resume_from:
-            raise ValueError(
-                "synapp's checkpoint demo runs on the single-broker proc"
-                " backend; cluster campaigns checkpoint through"
-                " checkpoint_campaign on the connected queues")
         thinker, makespan = _run_cluster(
-            cfg, {"submitted": 0, "completed": 0})
+            cfg, {"submitted": 0, "completed": 0},
+            resume_from=resume_from, ckpt_payload=ckpt_payload)
         return _metrics(cfg, thinker, makespan)
     proc = cfg.backend == "proc"
     if not cfg.use_value_server:
         vs = None
     elif proc:
-        vs = ShardedValueServer(cfg.vs_shards)
+        if cfg.vs_replicas > cfg.vs_shards:
+            # same contract as ClusterSpec: an unsatisfiable replica
+            # factor is a misconfiguration, not a silent downgrade
+            raise ValueError(
+                f"vs_replicas={cfg.vs_replicas} exceeds vs_shards="
+                f"{cfg.vs_shards}: the replica factor cannot be satisfied")
+        vs = ShardedValueServer(cfg.vs_shards, replicas=cfg.vs_replicas)
     else:
         vs = ValueServer()
     queues = ColmenaQueues(
@@ -312,6 +321,9 @@ def main(argv=None):
                         "brokers + per-host worker pools; implies the "
                         "proc-style topology)")
     p.add_argument("--no-value-server", action="store_true")
+    p.add_argument("--vs-replicas", type=int, default=1, metavar="R",
+                   help="Value Server replica factor (>=2 keeps keys "
+                        "readable through a shard/node loss)")
     p.add_argument("--checkpoint-every", type=int, default=0, metavar="K",
                    help="checkpoint the fabric every K results")
     p.add_argument("--ckpt", default="synapp.ckpt",
@@ -322,6 +334,7 @@ def main(argv=None):
     cfg = SynConfig(T=args.T, D=args.D, I=args.I, N=args.N,
                     backend=args.backend, cluster_hosts=args.cluster,
                     use_value_server=not args.no_value_server,
+                    vs_replicas=args.vs_replicas,
                     checkpoint_every=args.checkpoint_every,
                     checkpoint_path=args.ckpt)
     res = run_synapp(cfg, resume_from=args.resume)

@@ -127,16 +127,22 @@ class CampaignRecord:
 # queued tasks re-dispatch, leased (in-flight) tasks expire and redeliver,
 # completed-but-unconsumed results deliver from the restored result
 # queues, and the restored claim window swallows re-executions of work
-# that already published a result.
+# that already published a result.  When a Value Server is attached, its
+# contents (both storage tiers, deduplicated across replicas) are bundled
+# too, so proxied payloads survive the incarnation and restored task /
+# result proxies resolve -- campaigns no longer trade the Value Server
+# away to be checkpointable.
 
 
 def checkpoint_campaign(path: str, queues, record: CampaignRecord,
                         extra=None) -> str:
-    """Write record + queue state to ``path`` (atomic tmp+rename via
+    """Write record + queue state (+ Value Server contents, when one is
+    attached) to ``path`` (atomic tmp+rename via
     ``ColmenaQueues.checkpoint``).  Cluster deployments checkpoint the
     same way: the queues' transport snapshot is then a *federation
-    bundle* (every member broker's consistent cut), so one file still
-    resumes the whole cluster."""
+    bundle* (every member broker's consistent cut) and the value-server
+    snapshot spans the whole shard ring, so one file still resumes the
+    whole cluster."""
     payload = {"record": record.state(), "extra": extra}
     return queues.checkpoint(path, extra=payload)
 

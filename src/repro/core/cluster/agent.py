@@ -64,6 +64,11 @@ def build_pool(cfg: AgentConfig) -> ProcessPoolTaskServer:
     vs = None
     if cfg.vs_addresses:
         from repro.core.transport.shards import ShardedValueServer
+        # the ring (stable shard ids, epoch, replica factor) comes from
+        # the shards themselves -- pushed there by the launcher -- so
+        # every host's workers replicate and fail over identically, and
+        # a post-rebalance agent restart adopts the current membership
+        # even when its pickled address list has gone stale
         vs = ShardedValueServer.connect(cfg.vs_addresses)
     queues = ColmenaQueues(sorted(cfg.pools), transport=transport,
                            value_server=vs,

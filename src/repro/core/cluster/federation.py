@@ -27,7 +27,10 @@ guarantee survives federation unchanged:
   the application's blessed checkpoint site (no concurrent submits or
   unquiesced consumers mid-relay), the bundle is a resumable image of
   the whole cluster -- the same file format ``ColmenaQueues.checkpoint``
-  wraps.
+  wraps.  A campaign checkpoint pairs this bundle with a Value Server
+  ring snapshot (``transport.shards``), so proxied payloads resume with
+  the queues that reference them: restoring either half without the
+  other is what used to force inline payloads, and no longer happens.
 
 Standalone ``claim`` (no topic to route by) goes to the federation
 coordinator.  The shipped task servers never use it -- completion claims

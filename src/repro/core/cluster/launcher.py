@@ -81,7 +81,8 @@ class ClusterLauncher:
         self._addresses: Dict[str, tuple] = {}
         self._brokers: Dict[str, _mp.Process] = {}
         self._agents: Dict[str, _mp.Process] = {}
-        self._shards: list = []
+        self._shards: list = []             # [{host, idx, sid, proc, addr}]
+        self._next_sid = 0
         self.vs_addresses: list = []
         self._dir: Optional[str] = None
         self._stop = threading.Event()
@@ -119,10 +120,15 @@ class ClusterLauncher:
             p.start()
             sock.close()
             self._brokers[name] = p
-        # 2) Value Server shards (spec order -> the consistent-hash ring)
+        # 2) Value Server shards (spec order -> the consistent-hash ring),
+        # then push the versioned ring (stable sids + replica factor) to
+        # every shard so connected clients agree on placement and stale
+        # ones are redirected after a membership change
         for h in spec.hosts:
             for i in range(h.vs_shards):
                 self._start_shard(h.name, i)
+        if self._shards:
+            self._push_vs_ring()
         # 3) host agents (simulated hosts; ssh hosts are started by the
         # operator with ssh_commands)
         for h in spec.hosts:
@@ -135,19 +141,43 @@ class ClusterLauncher:
         self._threads.append(th)
         return self
 
-    def _start_shard(self, host: str, idx: int) -> None:
+    def _start_shard(self, host: str, idx: int) -> dict:
         from repro.core.transport.shards import _shard_main
+        sid = self._next_sid
+        self._next_sid += 1
         sock, addr = frames.make_server_socket(
-            os.path.join(self._dir, f"vs-{host}-{idx}.sock"), tcp=True)
-        spill_dir = (os.path.join(self._dir, f"spill-{host}-{idx}")
+            os.path.join(self._dir, f"vs-{host}-{sid}.sock"), tcp=True)
+        spill_dir = (os.path.join(self._dir, f"spill-{host}-{sid}")
                      if self.vs_spill else None)
         p = _mp.Process(target=_shard_main,
                         args=(sock, self.vs_capacity_bytes, spill_dir, None),
-                        daemon=True, name=f"colmena-vs-{host}-{idx}")
+                        daemon=True, name=f"colmena-vs-{host}-{sid}")
         p.start()
         sock.close()
-        self._shards.append((p, addr))
+        entry = {"host": host, "idx": idx, "sid": sid, "proc": p,
+                 "addr": addr}
+        self._shards.append(entry)
         self.vs_addresses.append(addr)
+        return entry
+
+    def _live_shards(self) -> list:
+        return [e for e in self._shards if e["proc"].is_alive()]
+
+    def _push_vs_ring(self) -> None:
+        """Install ring epoch 1 on every shard: stable sids in spec
+        order plus the spec's replica factor.  Every
+        ``ShardedValueServer.connect`` then adopts the identical
+        membership from the shards themselves."""
+        ring = {"epoch": 1,
+                "members": [(e["sid"], e["addr"]) for e in self._shards],
+                "replicas": self.spec.vs_replicas}
+        for e in self._shards:
+            client = frames.FrameClient(e["addr"])
+            try:
+                client.request({"op": "vs_set_ring", "ring": ring},
+                               retry=True)
+            finally:
+                client.close()
 
     def _agent_config(self, h: HostSpec) -> AgentConfig:
         backup = {t: [peer for peer in self.spec.pool_hosts(t)
@@ -208,11 +238,14 @@ class ClusterLauncher:
 
     def value_server(self):
         """A fresh client for the cluster's shard ring (None when the
-        spec declares no shards)."""
+        spec declares no shards).  The client adopts the launcher-pushed
+        ring -- stable shard ids, current epoch, and the spec's
+        ``vs_replicas`` factor -- from the shards themselves."""
         if not self.vs_addresses:
             return None
         from repro.core.transport.shards import ShardedValueServer
-        return ShardedValueServer.connect(self.vs_addresses)
+        return ShardedValueServer.connect(
+            [e["addr"] for e in self._live_shards()] or self.vs_addresses)
 
     def connect(self, topics=None, **queues_kw) -> ColmenaQueues:
         """A ``ColmenaQueues`` dialing the thinker host's broker --
@@ -279,14 +312,67 @@ class ClusterLauncher:
 
     def kill_host(self, host: str) -> None:
         """Chaos: SIGKILL the host's whole process group (agent + its
-        forked workers -- a node loss), then start the rescue drain."""
-        p = self._agents[host]
+        forked workers -- a node loss) AND its Value Server shard
+        processes (they live on that node too), then start the rescue
+        drain.  With ``spec.vs_replicas >= 2`` the dead shards' keys
+        stay readable via their ring successors; ``restore_host_shards``
+        brings the replica factor back afterwards."""
+        self.spec.host(host)                # typo'd names raise, not no-op
+        if (host not in self._agents
+                and not any(e["host"] == host for e in self._shards)):
+            raise ValueError(
+                f"host {host!r} runs neither a pool agent nor shards:"
+                " nothing to kill (a silent no-op here would let a chaos"
+                " test pass without injecting its fault)")
+        p = self._agents.get(host)
+        if p is not None:
+            try:
+                os.killpg(p.pid, signal.SIGKILL)
+            except (ProcessLookupError, PermissionError):
+                pass
+            p.join(timeout=5)
+        for e in self._shards:
+            if e["host"] == host and e["proc"].is_alive():
+                e["proc"].kill()
+                e["proc"].join(timeout=2)
+        if p is not None:
+            self._start_rescue(host)
+
+    def restore_host_shards(self, host: str) -> list:
+        """Launcher-driven shard recovery: for every dead shard on
+        ``host``, fork a replacement (fresh address), then drive one
+        ring rebalance per replacement through a management client --
+        the new shard joins, lost copies re-replicate from survivors,
+        and the dead member leaves the ring.  Stale connected clients
+        pick the new ring up via redirect frames on their next request.
+        Returns the replacement entries."""
+        from repro.core.transport.shards import ShardedValueServer
+        dead = [e for e in self._shards
+                if e["host"] == host and not e["proc"].is_alive()]
+        if not dead:
+            return []
+        live = self._live_shards()
+        if not live:
+            raise RuntimeError("no surviving shard to rebalance from")
+        # one management client for the whole recovery: its ring tracks
+        # each replace_shard's epoch bump as it drives them
+        mgmt = ShardedValueServer.connect([x["addr"] for x in live])
+        replaced = []
         try:
-            os.killpg(p.pid, signal.SIGKILL)
-        except (ProcessLookupError, PermissionError):
-            pass
-        p.join(timeout=5)
-        self._start_rescue(host)
+            for e in dead:
+                entry = self._start_shard(host, e["idx"])
+                # adopt the sid the ring actually assigned (max+1 rule)
+                # so launcher bookkeeping and ring membership never drift
+                entry["sid"] = mgmt.replace_shard(e["sid"],
+                                                  address=entry["addr"])
+                self._next_sid = max(self._next_sid, entry["sid"] + 1)
+                self._shards.remove(e)
+                if e["addr"] in self.vs_addresses:
+                    self.vs_addresses.remove(e["addr"])
+                replaced.append(entry)
+        finally:
+            mgmt.close()
+        return replaced
 
     # -- teardown -----------------------------------------------------------
 
@@ -306,14 +392,14 @@ class ClusterLauncher:
                 except (ProcessLookupError, PermissionError):
                     pass
                 p.join(timeout=2)
-        for p, addr in self._shards:
+        for e in self._shards:
             try:
-                frames.FrameClient(addr).request({"op": "shutdown"})
+                frames.FrameClient(e["addr"]).request({"op": "shutdown"})
             except (ConnectionError, OSError):
                 pass
-            p.join(timeout=2)
-            if p.is_alive():
-                p.terminate()
+            e["proc"].join(timeout=2)
+            if e["proc"].is_alive():
+                e["proc"].terminate()
         for name, p in self._brokers.items():
             try:
                 frames.FrameClient(

@@ -59,13 +59,27 @@ class ClusterSpec:
                  partition: Optional[Dict[str, str]] = None,
                  lease_timeout: float = 30.0,
                  snapshot_every: float = 0.0,
-                 snapshot_path: str = ""):
+                 snapshot_path: str = "",
+                 vs_replicas: int = 1):
         """partition: explicit topic -> home-broker-host overrides (the
         derived default homes each topic at its first pool host).
         snapshot_every/snapshot_path: periodic auto-snapshot of the
-        whole federation, written by the coordinator broker."""
+        whole federation, written by the coordinator broker.
+        vs_replicas: copies of every Value Server key across the shard
+        ring (>=2 keeps keys readable through a shard/node loss; the
+        launcher pushes the factor to the shards with the ring, so every
+        connected client replicates identically)."""
         if not hosts:
             raise ValueError("a ClusterSpec needs at least one host")
+        if vs_replicas < 1:
+            raise ValueError("vs_replicas must be >= 1")
+        total_shards = sum(h.vs_shards for h in hosts)
+        if vs_replicas > 1 and total_shards and vs_replicas > total_shards:
+            raise ValueError(
+                f"vs_replicas={vs_replicas} exceeds the {total_shards}"
+                " declared Value Server shard(s): a replica factor above"
+                " the shard count cannot be satisfied")
+        self.vs_replicas = vs_replicas
         names = [h.name for h in hosts]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate host names in spec: {names}")

@@ -417,6 +417,13 @@ class ProcessPoolTaskServer:
             env = envs[0]
             if env.meta.get("stop"):
                 dispatch.ack(flush=True)    # don't strand the stop envelope
+                vs = queues.value_server
+                if vs is not None and hasattr(vs, "flush_replication"):
+                    # drain queued replica fan-outs (async release/put
+                    # copies) before dying: an op stranded in the
+                    # background queue would leave a replica holding a
+                    # copy its primary already deleted
+                    vs.flush_replication(timeout=5.0)
                 os._exit(0)
             task = queues._decode_task(env)
             if (task.exclude_worker == identity

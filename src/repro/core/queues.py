@@ -158,12 +158,32 @@ class ColmenaQueues:
         drained (already-acked) batch has been counted -- so the
         progress written cannot drift from the captured queues.  A count
         that includes a task the snapshot missed would make a resumed
-        ``wait_until_done`` wait forever.  Value Server contents are
-        NOT captured (shards die with the incarnation); checkpointed
-        campaigns should carry payloads inline."""
+        ``wait_until_done`` wait forever.
+
+        Value Server contents travel WITH the checkpoint: a snapshot of
+        the attached server (both storage tiers, deduplicated across
+        replicas) is bundled so restored task/result proxies resolve in
+        the next incarnation -- proxied payloads no longer have to be
+        carried inline to be checkpointable."""
+        # transport BEFORE value server: a payload is always put before
+        # the envelope referencing it, so any proxy inside a captured
+        # envelope was stored before the transport cut -- and therefore
+        # before the (later) VS snapshot.  The reverse order could image
+        # a result envelope whose payload missed the VS cut: a dangling
+        # proxy on a *claimed* task id, which is an unrecoverable lost
+        # task.  (The residual window -- a worker publishing and then
+        # releasing its one-shot inputs between the two cuts -- at worst
+        # makes the redelivered re-execution error out visibly, never
+        # silently lose work.)
+        transport_snap = self.transport.snapshot()
+        vs = None
+        if self.value_server is not None \
+                and hasattr(self.value_server, "snapshot"):
+            vs = self.value_server.snapshot()
         payload = {"version": 1,
-                   "transport": self.transport.snapshot(),
+                   "transport": transport_snap,
                    "active": self.active_count,
+                   "vs": vs,
                    "extra": extra}
         tmp = path + ".tmp"
         parent = os.path.dirname(os.path.abspath(path))
@@ -230,6 +250,17 @@ class ColmenaQueues:
         first, or use the process pool for resumable campaigns."""
         if payload is None:
             payload = self.load_checkpoint(path)
+        vs_blob = payload.get("vs")
+        if vs_blob is not None:
+            if self.value_server is None:
+                raise ValueError(
+                    "checkpoint bundles Value Server contents but this "
+                    "fabric has no value_server attached: restored "
+                    "proxies would dangle")
+            # restore payloads BEFORE queue state: once the transport is
+            # live a consumer could lease a restored task and resolve its
+            # proxies immediately
+            self.value_server.restore(vs_blob)
         # the checkpointed incarnation is dead: requeue its in-flight
         # leases immediately instead of waiting out their durations
         self.transport.restore(payload["transport"], expire_leases=True)

@@ -150,6 +150,29 @@ class FrameClient:
                 f"{header.get('op')} failed server-side: {resp[0]['error']}")
         return resp
 
+    def probe(self, timeout: float = 1.0) -> bool:
+        """Liveness check on a *fresh* connection (the cached per-thread
+        socket is left alone): dial, ping, and answer within ``timeout``.
+        Used by shard rebalancing to decide whether a departing member
+        can still be drained or must be rebuilt from its replicas -- a
+        blocked cached socket must not make a live shard look dead."""
+        try:
+            sock = connect(self.address)
+        except OSError:
+            return False
+        try:
+            sock.settimeout(timeout)
+            send_frame(sock, {"op": "ping"})
+            recv_frame(sock)
+            return True
+        except (OSError, ConnectionError):
+            return False
+        finally:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
     def close(self) -> None:
         sock = getattr(self._tls, "sock", None)
         if sock is not None:

@@ -108,6 +108,15 @@ class ValueServer:
             size = len(pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL))
         with self._lock:
             self._await_key_locked(key)
+            # putting over an existing key replaces it wholesale: the old
+            # entry's size must leave the accounting (and a stale spill
+            # copy must leave the disk), or restore/rebalance re-puts
+            # would inflate _bytes until the LRU thrashes live entries
+            old = self._store.pop(key, None)
+            if old is not None:
+                self._bytes -= old.size
+            if self._spilled.pop(key, None) is not None:
+                self._remove_spill_file(key)
             self._store[key] = _Entry(value, size, refs)
             self._bytes += size
             self.stats["puts"] += 1
@@ -215,6 +224,118 @@ class ValueServer:
                 self._bytes -= entry.size
             elif self._spilled.pop(key, None) is not None:
                 self._remove_spill_file(key)
+
+    # -- durability: inventory / migration / snapshot -------------------------
+
+    def keys_info(self) -> list:
+        """``[(key, size, refs, tier)]`` across both tiers (tier is
+        ``"mem"`` or ``"spill"``).  Waits out staged spill I/O first so a
+        key mid-transition is never missed -- this is what shard
+        rebalancing enumerates before migrating."""
+        with self._lock:
+            while self._io_keys:
+                self._io_done.wait()
+            out = [(k, e.size, e.refs, "mem") for k, e in self._store.items()]
+            out.extend((k, size, refs, "spill")
+                       for k, (size, refs) in self._spilled.items())
+            return out
+
+    def info_of(self, key: str) -> tuple:
+        """(size, refs, tier) of one key (KeyError when absent)."""
+        with self._lock:
+            self._await_key_locked(key)
+            entry = self._store.get(key)
+            if entry is not None:
+                return entry.size, entry.refs, "mem"
+            size, refs = self._spilled[key]
+            return size, refs, "spill"
+
+    def peek(self, key: str) -> tuple:
+        """(value, size, refs) without changing tiers: a spilled entry is
+        read from its file under the lock (like ``snapshot``) instead of
+        being faulted into memory -- migration exports must not evict
+        other entries, delete the on-disk copy, or pay the simulated
+        fetch bandwidth just to copy bytes off a shard."""
+        with self._lock:
+            self._await_key_locked(key)
+            entry = self._store.get(key)
+            if entry is not None:
+                return entry.value, entry.size, entry.refs
+            if key not in self._spilled:
+                raise KeyError(key)
+            size, refs = self._spilled[key]
+            return self._read_spill(key), size, refs
+
+    def detach_spilled(self, key: str) -> tuple:
+        """Forget a *spilled* entry without deleting its file; returns
+        (size, refs).  The migration fast path: when source and
+        destination shards share a filesystem, the caller renames the
+        spill file into the destination's spill dir and ``adopt_spilled``
+        registers it there -- the payload bytes never cross a socket.
+        KeyError when the key is not currently in the spill tier (the
+        caller falls back to the export/re-put path)."""
+        with self._lock:
+            self._await_key_locked(key)
+            if key in self._store or key not in self._spilled:
+                raise KeyError(key)
+            size, refs = self._spilled.pop(key)
+            return size, refs
+
+    def adopt_spilled(self, key: str, size: int, refs: int) -> None:
+        """Register a key whose spill file was placed at
+        ``_spill_path(key)`` by a migration rename (counterpart of
+        ``detach_spilled``)."""
+        assert self.spill_dir is not None, "adopting requires a spill tier"
+        with self._lock:
+            self._await_key_locked(key)
+            self._spilled[key] = [size, refs]
+            self.stats["puts"] += 1
+            self.stats["bytes_put"] += size
+
+    def snapshot(self) -> bytes:
+        """Deterministic image of the whole store: a sorted list of
+        ``(key, value, size, refs)`` covering both tiers (spilled values
+        are read from their files -- the snapshot reuses the spill
+        tier's on-disk pickle format without faulting anything back into
+        memory).  Identical contents always produce identical bytes, so
+        checkpoint files stay comparable across incarnations.
+
+        The whole capture -- spill-file reads included -- runs under the
+        store lock: a concurrent ``get`` fault-in or ``release`` removes
+        spill files, and reading them unlocked could race that removal
+        mid-snapshot.  Serializing other ops behind a (rare) checkpoint
+        is the price of the cut being consistent."""
+        with self._lock:
+            while self._io_keys:
+                self._io_done.wait()
+            entries = {k: (k, e.value, e.size, e.refs)
+                       for k, e in self._store.items()}
+            for k, (size, refs) in self._spilled.items():
+                entries[k] = (k, self._read_spill(k), size, refs)
+            return pickle.dumps(
+                {"version": 1,
+                 "entries": [entries[k] for k in sorted(entries)]},
+                protocol=pickle.HIGHEST_PROTOCOL)
+
+    def restore(self, data: bytes) -> int:
+        """Re-put every entry of a ``snapshot`` (keys and refcounts
+        preserved; capacity/spill policy re-applied on the way in).
+        Returns the number of entries restored.
+
+        Also accepts a *sharded* snapshot (``ShardedValueServer``):
+        there the entry values are the client's pickle bytes, so they
+        are unpickled on the way in -- a checkpoint taken on the proc
+        backend restores onto an in-process deployment and vice versa."""
+        state = pickle.loads(data)
+        if state.get("version") != 1:
+            raise ValueError("unsupported value-server snapshot version "
+                             f"{state.get('version')!r}")
+        sharded = state.get("sharded", False)
+        for key, value, size, refs in state["entries"]:
+            if sharded:
+                value = pickle.loads(value)
+            self.put(value, size=size, refs=refs, key=key)
+        return len(state["entries"])
 
     # -- spill tier ---------------------------------------------------------
 

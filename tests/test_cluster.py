@@ -154,6 +154,7 @@ def test_federated_snapshot_restore_bundle(federation):
 # topology-aware straggler placement (two pools, one shared broker)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_cross_host_backup_lands_on_other_host():
     queues = ColmenaQueues(["t"], backend="proc", lease_timeout=5.0)
 
@@ -219,6 +220,7 @@ def _times_ten(x):
     return x * 10
 
 
+@pytest.mark.slow
 def test_two_host_campaign_exactly_once():
     spec = ClusterSpec([
         HostSpec("h0", pools={"t": 2}, thinker=True),
@@ -273,6 +275,7 @@ def _slow_sim(x):
     return x + 1000
 
 
+@pytest.mark.slow
 def test_kill_one_host_redelivers_to_survivor():
     """Node-loss chaos: SIGKILL one host's whole pool process group
     mid-campaign.  Its queued dispatch envelopes are rescued back to the
@@ -435,3 +438,126 @@ def test_derived_active_excludes_consumed_but_leased(tmp_path):
         assert payload["active"] == 1       # live-task only
     finally:
         t.close()
+
+
+# ---------------------------------------------------------------------------
+# durable Value Server at cluster scale: replica survival, shard restart,
+# and the kill -9'd campaign that resumes WITH the Value Server enabled
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cluster_vs_replicas_survive_host_kill_and_restore():
+    """kill_host takes the host's shard processes with it (node loss).
+    With vs_replicas=2 every key stays readable -- byte-identical --
+    via its ring successor; restore_host_shards then rebuilds the
+    replica factor and stale clients converge by redirect."""
+    spec = ClusterSpec([
+        HostSpec("h0", vs_shards=1, pools={"t": 1}, thinker=True),
+        HostSpec("h1", vs_shards=1, pools={"t": 1}),
+    ], vs_replicas=2, lease_timeout=3.0)
+    with ClusterLauncher(spec) as lc:
+        vs = lc.value_server()
+        assert vs.replicas == 2             # adopted from the pushed ring
+        vals = {vs.put(os.urandom(400), sync=True): None for _ in range(20)}
+        vals = {k: vs.get(k) for k in vals}
+        lc.kill_host("h1")
+        for k, v in vals.items():
+            assert vs.get(k) == v           # replicas cover the dead shard
+        assert vs.client_stats["replica_reads"] > 0
+        replaced = lc.restore_host_shards("h1")
+        assert len(replaced) == 1 and replaced[0]["host"] == "h1"
+        fresh = lc.value_server()
+        assert fresh._epoch > 1
+        for k, v in vals.items():
+            assert fresh.get(k) == v
+        # replica factor is fully restored: every key has 2 copies again
+        assert sum(s["len"] for s in fresh.per_shard_stats()) == 2 * len(vals)
+        # the stale pre-kill client is redirected onto the new ring
+        for k, v in vals.items():
+            assert vs.get(k) == v
+        assert vs._epoch == fresh._epoch
+        assert vs.client_stats["redirects"] >= 1
+
+
+def _echo_payload(payload: bytes):
+    time.sleep(0.2)
+    return payload[:16]
+
+
+@pytest.mark.slow
+def test_cluster_campaign_kill9_resume_with_value_server(tmp_path):
+    """The acceptance scenario: a 2-host cluster campaign with the Value
+    Server ENABLED (inputs proxied through the shard ring) is checkpointed
+    mid-flight, the whole incarnation is SIGKILLed -- agents, brokers,
+    shards -- and a fresh cluster resumes from the file: zero lost ids,
+    zero duplicated ids, and every restored proxy resolves (results echo
+    their input payload's prefix, which only resolves through the VS)."""
+    path = str(tmp_path / "cluster.ckpt")
+    spec = ClusterSpec([
+        HostSpec("h0", pools={"t": 1}, vs_shards=1, thinker=True),
+        HostSpec("h1", pools={"t": 1}, vs_shards=1),
+    ], vs_replicas=2, lease_timeout=2.0)
+    payloads = {}
+    with ClusterLauncher(spec, methods=[(_echo_payload,
+                                         {"topic": "t", "name": "t"})],
+                         proxy_threshold=1 << 10) as lc:
+        vs = lc.value_server()
+        queues = lc.connect(["t"], value_server=vs,
+                            proxy_threshold=1 << 10)
+        submitted = []
+        for i in range(10):
+            data = bytes([i]) * 2048        # above threshold: proxied
+            tid = queues.send_task(data, method="t", topic="t")
+            submitted.append(tid)
+            payloads[tid] = data
+        consumed = {}
+        for _ in range(3):
+            r = queues.get_result("t", timeout=60)
+            assert r is not None and r.success, r and r.error
+            consumed[r.task_id] = r.value
+        queues.checkpoint(path)
+        # kill -9 the whole incarnation: agents (process groups), every
+        # broker, every shard -- nothing survives but the file
+        for host, p in list(lc._agents.items()):
+            try:
+                os.killpg(p.pid, signal.SIGKILL)
+            except (ProcessLookupError, PermissionError):
+                pass
+        for e in lc._shards:
+            e["proc"].kill()
+        for name, p in lc._brokers.items():
+            p.kill()
+        try:
+            queues.transport.client.close()
+        except Exception:
+            pass
+    # fresh incarnation, same spec shape
+    spec2 = ClusterSpec([
+        HostSpec("h0", pools={"t": 1}, vs_shards=1, thinker=True),
+        HostSpec("h1", pools={"t": 1}, vs_shards=1),
+    ], vs_replicas=2, lease_timeout=2.0)
+    with ClusterLauncher(spec2, methods=[(_echo_payload,
+                                          {"topic": "t", "name": "t"})],
+                         proxy_threshold=1 << 10) as lc2:
+        vs2 = lc2.value_server()
+        q2 = lc2.connect(["t"], value_server=vs2, proxy_threshold=1 << 10)
+        try:
+            assert q2.resume(path) is None
+            assert q2.active_count == len(submitted) - len(consumed)
+            recovered = {}
+            for _ in range(q2.active_count):
+                r = q2.get_result("t", timeout=90)
+                assert r is not None and r.success, r and r.error
+                assert r.task_id not in consumed    # never redone
+                assert r.task_id not in recovered   # never duplicated
+                recovered[r.task_id] = r.value
+            # zero lost: every submitted id completed exactly once, and
+            # every completion echoes its ORIGINAL proxied payload
+            done = {**consumed, **recovered}
+            assert set(done) == set(submitted)
+            for tid, value in done.items():
+                assert value == payloads[tid][:16]
+            assert q2.get_result("t", timeout=1.5) is None  # quiescent
+            assert q2.active_count == 0
+        finally:
+            q2.shutdown()

@@ -374,3 +374,155 @@ def test_get_results_batched_drain():
             got.extend(r.value for r in batch)
     assert sorted(got) == list(range(12))
     assert queues.active_count == 0
+
+
+# ---------------------------------------------------------------------------
+# durable Value Server: replication, failover, ring rebalancing, snapshots
+# ---------------------------------------------------------------------------
+
+def test_hash_ring_successors_distinct_and_stable():
+    ring = HashRing([0, 1, 2, 3])
+    for i in range(50):
+        succ = ring.nodes(f"key-{i}", 3)
+        assert len(succ) == len(set(succ)) == 3
+        assert succ == ring.nodes(f"key-{i}", 3)      # deterministic
+        assert succ[0] == ring.node(f"key-{i}")       # primary first
+    # asking for more replicas than shards clamps, never loops
+    assert sorted(ring.nodes("x", 99)) == [0, 1, 2, 3]
+    # removing a member leaves other keys' primaries untouched
+    r3 = HashRing([0, 2, 3])
+    for i in range(200):
+        if ring.node(f"key-{i}") != 1:
+            assert r3.node(f"key-{i}") == ring.node(f"key-{i}")
+
+
+def test_replicated_get_fails_over_when_primary_killed():
+    vs = ShardedValueServer(3, replicas=2)
+    try:
+        vals = {vs.put(os.urandom(300), sync=True): i for i in range(15)}
+        assert len(vs) == 30                # copies counted
+        victim = vs.shard_of(next(iter(vals)))
+        originals = {k: vs.get(k) for k in vals}
+        vs.terminate_shard(victim)
+        # every key -- including those whose primary died -- reads back
+        # byte-identically from a surviving replica
+        for k, v in originals.items():
+            assert vs.get(k) == v
+        assert vs.client_stats["failovers"] > 0
+        assert vs.client_stats["replica_reads"] > 0
+    finally:
+        vs.shutdown()
+
+
+def test_replica_refcount_propagation():
+    vs = ShardedValueServer(3, replicas=3)
+    try:
+        key = vs.put(b"pinned" * 100, refs=1, sync=True)
+        vs.add_ref(key)
+        vs.flush_replication()
+        assert not vs.release(key)          # still one reference
+        assert vs.release(key)              # last reference dropped
+        vs.flush_replication()
+        # deleted on EVERY replica, not just the primary
+        assert key not in vs
+        assert sum(s["len"] for s in vs.per_shard_stats()) == 0
+    finally:
+        vs.shutdown()
+
+
+def test_add_shard_migrates_fraction_and_redirects_stale_client():
+    vs = ShardedValueServer(3)
+    try:
+        vals = {vs.put(os.urandom(200)): None for _ in range(60)}
+        vals = {k: vs.get(k) for k in vals}
+        stale = ShardedValueServer.connect(
+            [addr for _, addr in vs._members])
+        assert stale._epoch == vs._epoch    # adopted the pushed ring
+        new_sid, moved = vs.add_shard()
+        # the consistent ring bounds movement to roughly 1/N of the keys
+        assert 0 < moved < len(vals) // 2, moved
+        for k, v in vals.items():
+            assert vs.get(k) == v
+        # the stale client is *redirected* -- never served a miss -- and
+        # converges on the new ring
+        for k, v in vals.items():
+            assert stale.get(k) == v
+        assert stale._epoch == vs._epoch
+        assert stale.client_stats["redirects"] >= 1
+        assert any(s["sid"] == new_sid and s["len"] > 0
+                   for s in vs.per_shard_stats())
+    finally:
+        vs.shutdown()
+
+
+def test_remove_shard_drains_its_keys():
+    vs = ShardedValueServer(3)
+    try:
+        vals = {vs.put(os.urandom(200)): None for _ in range(45)}
+        vals = {k: vs.get(k) for k in vals}
+        victim = vs.shard_of(next(iter(vals)))
+        vs.remove_shard(victim)
+        assert victim not in [sid for sid, _ in vs._members]
+        for k, v in vals.items():
+            assert vs.get(k) == v
+        assert len(vs) == len(vals)         # nothing lost, nothing doubled
+    finally:
+        vs.shutdown()
+
+
+def test_spill_tier_migration_moves_files_by_rename():
+    """Co-located shards migrate spilled keys by renaming the spill file
+    into the destination's spill dir -- zero payload bytes on the wire."""
+    vs = ShardedValueServer(2, capacity_bytes=300, spill=True)
+    try:
+        vals = {vs.put(os.urandom(250)): None for _ in range(12)}
+        vals = {k: vs.get(k) for k in vals}
+        assert vs.spilled_bytes > 0         # the capacity bound is biting
+        _, moved = vs.add_shard()
+        assert moved > 0
+        assert vs.client_stats["migrate_renames"] > 0
+        for k, v in vals.items():
+            assert vs.get(k) == v           # byte-identical after the move
+    finally:
+        vs.shutdown()
+
+
+def test_sharded_snapshot_restores_across_topologies():
+    """A snapshot taken on one ring restores onto a different shard
+    count AND replica factor: restore re-puts through the current ring."""
+    vs = ShardedValueServer(3)
+    try:
+        pinned = vs.put(b"weights" * 50, refs=1)
+        vals = {vs.put(os.urandom(200)): None for _ in range(10)}
+        vals = {k: vs.get(k) for k in vals}
+        blob = vs.snapshot()
+        assert vs.snapshot() == blob        # deterministic bytes
+    finally:
+        vs.shutdown()
+    vs2 = ShardedValueServer(2, replicas=2)
+    try:
+        assert vs2.restore(blob) == len(vals) + 1
+        for k, v in vals.items():
+            assert vs2.get(k) == v
+        assert len(vs2) == (len(vals) + 1) * 2      # replicated on restore
+        # refcounts travel: the pinned entry still needs its release
+        assert vs2.release(pinned)
+        vs2.flush_replication()             # replica delete is async
+        assert pinned not in vs2
+    finally:
+        vs2.shutdown()
+
+
+def test_value_server_snapshot_roundtrip_includes_spill_tier(tmp_path):
+    vs = ValueServer(capacity_bytes=1_000, spill_dir=str(tmp_path / "a"))
+    ka = vs.put(os.urandom(600), refs=1)    # pinned: stays in memory
+    kb = vs.put(os.urandom(300))
+    kc = vs.put(os.urandom(300))            # over capacity: kb spills
+    assert vs.spilled_bytes > 0
+    blob = vs.snapshot()
+    assert vs.snapshot() == blob            # deterministic bytes
+    vs2 = ValueServer(spill_dir=str(tmp_path / "b"))
+    assert vs2.restore(blob) == 3
+    for k in (ka, kb, kc):
+        assert vs2.get(k) == vs.get(k)      # both tiers round-trip
+    assert vs2._store[ka].refs == 1         # pins survive the round-trip
