@@ -1,0 +1,18 @@
+"""Static + runtime checking of the dispatch fabric's concurrency invariants.
+
+Two halves:
+
+- ``fabriclint`` -- an AST analyzer over ``src/repro/core/**`` whose named
+  passes encode the invariants the fabric's correctness rests on
+  (predicate loops around ``Condition.wait``, the idempotent-op registry
+  behind reconnect-resend, lock-guarded lazy init, daemon-thread
+  lifecycle, monotonic deadlines, single-pickle-per-hop frame hygiene).
+  Run as ``python -m repro.analysis.fabriclint --check``.
+
+- ``witness`` -- an opt-in runtime lock-order witness: instrumented
+  Lock/RLock/Condition wrappers that record each thread's acquisition
+  chain, build the global acquisition graph, and fail fast on a cycle.
+  The known-good edge set is checked in at ``analysis/lock_order.toml``;
+  the pytest ``--lock-witness`` option (see ``tests/conftest.py``)
+  activates it for a whole test run.
+"""

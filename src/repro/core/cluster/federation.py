@@ -137,6 +137,9 @@ class FederatedBroker:
         return dump_fed_snapshot(snaps)
 
     def fed_restore(self, payload: bytes, expire_leases: bool) -> None:
+        # control-plane decode: the payload IS a federation snapshot
+        # bundle this layer owns, not a relayed task envelope
+        # fabriclint: skip=frame-header-hygiene -- snapshot bundle, not an envelope
         state = pickle.loads(payload)
         if not is_fed_snapshot(state):
             # a single-broker snapshot restores into the local member

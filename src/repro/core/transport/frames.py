@@ -120,20 +120,13 @@ class FrameClient:
     def request(self, header: dict, payload: bytes = b"",
                 retry: bool = False) -> Tuple[dict, bytes]:
         """retry: reconnect-and-resend once on a dropped connection.  Only
-        set it for ops whose resend cannot change state or mis-answer the
-        caller: read-only probes (len, vs_get, vs_size_of, vs_contains,
-        vs_stats, snapshot), ops that converge under repetition (wake --
-        epochs only ever bump; vs_delete -- deleting an absent key is a
-        no-op; restore -- wholesale state replacement).  Queue ``get`` is
-        deliberately NOT retried even though leases make a resend *safe*:
-        a get is a leased dequeue, so a dropped response merely strands a
-        lease that expires and redelivers -- resending would fetch
-        different envelopes under a second lease and hide the failure.
-        A non-idempotent op (put, claim, vs_put, vs_release) may already
-        have been applied before the connection died and resending would
-        apply it twice or mis-answer it -- those surface the error instead.
-        A response carrying an ``error`` header (server-side handler
-        exception) is raised here as RuntimeError."""
+        set it for ops declared idempotent in
+        ``repro.analysis.idempotent_ops.IDEMPOTENT_OPS`` (each entry
+        carries the one-line justification; the module docstring argues
+        the deliberate exclusions -- get, claim, put, renew, ack).  The
+        ``idempotent-retry-registry`` fabriclint pass enforces this at
+        every call site.  A response carrying an ``error`` header
+        (server-side handler exception) is raised here as RuntimeError."""
         sock = self._sock()
         try:
             send_frame(sock, header, payload)

@@ -123,8 +123,6 @@ class ProcChannel(Channel):
         self._t.wake_all()
 
     def __len__(self) -> int:
-        # retry=True is safe: len is a read-only probe, a resend cannot
-        # change broker state
         header, _ = self._t.request(
             {"op": "len", "topic": self.topic, "kind": self.kind},
             retry=True)
@@ -217,8 +215,6 @@ class ProcTransport(Transport):
 
     def wake_all(self) -> None:
         try:
-            # retry=True is safe: wake only bumps epochs; waking twice is
-            # indistinguishable from waking once to every consumer
             self.request({"op": "wake"}, retry=True)
         except (ConnectionError, OSError):
             pass                    # broker already torn down: nothing parked
@@ -231,13 +227,10 @@ class ProcTransport(Transport):
         return header["claimed"]
 
     def snapshot(self) -> bytes:
-        # retry=True is safe: snapshot is a read-only serialization
         _, payload = self.request({"op": "snapshot"}, retry=True)
         return payload
 
     def restore(self, data: bytes, expire_leases: bool = False) -> None:
-        # retry=True is safe: restore wholesale-replaces broker state, so
-        # applying the same snapshot twice converges to the same state
         self.request({"op": "restore", "expire_leases": expire_leases},
                      data, retry=True)
 

@@ -560,13 +560,13 @@ class ShardedValueServer:
         reachable and KeyError when every live replica misses.  A miss
         on one replica is never authoritative -- a restarted (blank)
         primary must not shadow a live replica's copy.  ``hit(resp,
-        payload, i)`` extracts the answer or returns ``_MISS``.
-        retry=True on the wire is safe: these ops are read-only probes."""
+        payload, i)`` extracts the answer or returns ``_MISS``."""
         for _ in range(4):
             stale = None
             alive = 0
             for i, sid in enumerate(self._replica_set(key)):
                 try:
+                    # fabriclint: retry-ops=vs_get,vs_size_of,vs_contains
                     h, payload = self._send(sid, header, retry=True)
                 except (ConnectionError, OSError):
                     self.client_stats["failovers"] += 1
@@ -614,8 +614,6 @@ class ShardedValueServer:
             key, {"op": "vs_release", "key": key})["deleted"]
 
     def delete(self, key: str) -> None:
-        # retry=True is safe: deleting an already-deleted key is a no-op,
-        # so a resend of an applied delete converges to the same state
         self._write_op(key, {"op": "vs_delete", "key": key}, retry=True)
 
     def size_of(self, key: str) -> int:
@@ -638,12 +636,16 @@ class ShardedValueServer:
             return False
 
     def prefetch(self, key: str) -> Future:
-        # the executor is per-process: a forked worker lazily builds its own
-        if self._resolver is None or self._resolver_pid != os.getpid():
-            self._resolver = ThreadPoolExecutor(
-                max_workers=4, thread_name_prefix="vs-resolve")
-            self._resolver_pid = os.getpid()
-        return self._resolver.submit(self.get, key)
+        # the executor is per-process: a forked worker lazily builds its
+        # own.  Guarded like _repl_queue -- two racing prefetch calls must
+        # not each build an executor (the loser's 4 threads would leak)
+        with self._meta_lock:
+            if self._resolver is None or self._resolver_pid != os.getpid():
+                self._resolver = ThreadPoolExecutor(
+                    max_workers=4, thread_name_prefix="vs-resolve")
+                self._resolver_pid = os.getpid()
+            resolver = self._resolver
+        return resolver.submit(self.get, key)
 
     # -- membership changes / rebalancing -------------------------------------
 
@@ -906,7 +908,6 @@ class ShardedValueServer:
         out = []
         for sid, _ in self._members:
             try:
-                # retry=True is safe: vs_stats is a read-only probe
                 header, _ = self._send(sid, {"op": "vs_stats"}, retry=True)
             except (ConnectionError, OSError):
                 # introspection must tolerate the node-loss states the

@@ -1,0 +1,12 @@
+"""Fixture: a pickled blob smuggled inside a wire header -- headers are
+small plain dicts pickled once per hop; payload bytes ride the frame
+body (single-pickle-per-hop).
+Must trip the frame-header-hygiene pass."""
+import pickle
+
+
+def send_result(client, topic, result):
+    header, _ = client.request(
+        {"op": "result", "topic": topic,
+         "value": pickle.dumps(result)})     # blob belongs in the body
+    return header

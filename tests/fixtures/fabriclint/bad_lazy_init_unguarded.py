@@ -1,0 +1,17 @@
+"""Fixture: lazy init under `if self._x is None` with no lock -- two
+racing callers each build the resource and one copy leaks (the PR-5
+split-replication-FIFO bug class).
+Must trip the guarded-lazy-init pass."""
+import queue
+import threading
+
+
+class SplitQueue:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._q = None
+
+    def submit(self, item):
+        if self._q is None:             # unguarded: racing callers split it
+            self._q = queue.SimpleQueue()
+        self._q.put(item)

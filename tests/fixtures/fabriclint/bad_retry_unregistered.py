@@ -1,0 +1,11 @@
+"""Fixture: retry=True on an op that is NOT in the IDEMPOTENT_OPS
+registry ('put' may already have been applied before the connection
+died; a resend double-applies it).
+Must trip the idempotent-retry-registry pass."""
+
+
+def resubmit(client, topic, blob):
+    header, _ = client.request(
+        {"op": "put", "topic": topic, "kind": "task"}, blob,
+        retry=True)
+    return header

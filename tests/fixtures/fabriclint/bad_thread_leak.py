@@ -1,0 +1,16 @@
+"""Fixture: daemon thread with no stop method, no sentinel, no join --
+it spins until the interpreter dies, holding whatever it captured.
+Must trip the thread-lifecycle pass."""
+import threading
+import time
+
+
+class Poller:
+    def __init__(self, fn):
+        self.fn = fn
+        threading.Thread(target=self._loop, daemon=True).start()
+
+    def _loop(self):
+        while True:                     # no flag, no sentinel, no join
+            self.fn()
+            time.sleep(1.0)

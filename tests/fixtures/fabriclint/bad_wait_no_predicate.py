@@ -1,0 +1,17 @@
+"""Fixture: Condition.wait() with no while-predicate loop and no timeout
+-- a spurious wakeup or stolen notify strands the waiter forever.
+Must trip the wait-needs-predicate pass."""
+import threading
+
+
+class LostWakeup:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self.ready = False
+
+    def consume(self):
+        with self._cond:
+            if not self.ready:          # an `if`, not a `while`: broken
+                self._cond.wait()
+            self.ready = False

@@ -1,0 +1,8 @@
+"""Fixture: lease deadline arithmetic on time.time() -- an NTP step or
+DST change silently expires (or immortalizes) every lease in flight.
+Must trip the monotonic-deadlines pass."""
+import time
+
+
+def lease_expired(granted_at: float, lease_timeout: float) -> bool:
+    return time.time() - granted_at > lease_timeout
