@@ -2,7 +2,8 @@
 
 Two halves:
 
-- ``fabriclint`` -- an AST analyzer over ``src/repro/core/**`` whose named
+- ``fabriclint`` -- an AST analyzer over ``src/repro/core/**`` and
+  ``src/repro/serving/**`` whose named
   passes encode the invariants the fabric's correctness rests on
   (predicate loops around ``Condition.wait``, the idempotent-op registry
   behind reconnect-resend, lock-guarded lazy init, daemon-thread

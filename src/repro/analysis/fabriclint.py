@@ -50,7 +50,12 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
 from repro.analysis.idempotent_ops import IDEMPOTENT_OPS
 
 REPO_ROOT = Path(__file__).resolve().parents[3]
-DEFAULT_TARGET = REPO_ROOT / "src" / "repro" / "core"
+# the fabric's concurrency surface: the dispatch core plus the serving
+# subsystem (the shard's serve loop, heartbeat thread, and lease
+# bookkeeping live under the same invariants)
+DEFAULT_TARGETS = (REPO_ROOT / "src" / "repro" / "core",
+                   REPO_ROOT / "src" / "repro" / "serving")
+DEFAULT_TARGET = DEFAULT_TARGETS[0]      # kept for callers by name
 DEFAULT_BASELINE = REPO_ROOT / "analysis" / "baseline.json"
 
 # relay modules: code that forwards envelopes it must not re-pickle
@@ -598,7 +603,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="run only this pass (repeatable)")
     args = ap.parse_args(argv)
 
-    paths = args.paths or [DEFAULT_TARGET]
+    paths = args.paths or list(DEFAULT_TARGETS)
     baseline_path = args.baseline
     if baseline_path is None and not args.paths:
         baseline_path = DEFAULT_BASELINE

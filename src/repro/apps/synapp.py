@@ -65,17 +65,66 @@ class SynConfig:
     checkpoint_path: str = ""    # where checkpoints go (required if K > 0)
     lease_timeout: float = 10.0  # unacked-delivery expiry; bounds how long a
                                  # resumed run waits to re-run in-flight work
+    score_candidates: int = 0    # >0: Colmena-style steering -- the proxy
+                                 # model (served by an inference shard) ranks
+                                 # this many candidate inputs per submission
+                                 # and the Thinker submits the best one
+    inference_shards: int = 1    # scorer shard processes (proc/cluster
+                                 # backends; the local backend serves the
+                                 # proxy model from an in-process thread)
+
+
+def proxy_scorer_factory():
+    """The synapp "proxy model": a numpy LCG that maps a token prompt to
+    a deterministic pseudo-score stream.  It exercises the full serving
+    path -- bucketing, micro-batching, continuous decode, put-claim
+    results -- without importing jax, so the steering demo runs on any
+    backend at test speed.  Swap in
+    ``repro.serving.shard.default_engine_factory`` for the real reduced
+    model."""
+
+    class _State:
+        def __init__(self, cur, padded_b):
+            self.cur = cur
+            self.padded_b = padded_b
+
+    class _ProxyModel:
+        def prefill_batch(self, tokens, *, reserve=None, frames=None):
+            first = (tokens.astype(np.int64).sum(axis=1) * 31 + 7) % 997
+            return first, _State(first, tokens.shape[0])
+
+        def decode_batch(self, state):
+            state.cur = (state.cur * 31 + 7) % 997
+            return state.cur
+
+        def gather_rows(self, state, rows):
+            idx = np.asarray(list(rows))
+            return _State(state.cur[idx], len(idx))
+
+    return _ProxyModel()
+
+
+def _serve_spec(cfg: SynConfig):
+    from repro.serving.shard import ServeSpec
+    return ServeSpec(engine_factory=proxy_scorer_factory,
+                     max_batch=max(cfg.score_candidates, 4),
+                     max_batch_delay_ms=5.0)
 
 
 class SynThinker(BaseThinker):
     def __init__(self, queues, cfg: SynConfig, *, submitted: int = 0,
-                 completed: int = 0):
+                 completed: int = 0, scorer=None):
         """submitted/completed seed the progress counters when resuming
         from a checkpoint: already-completed work is never resubmitted,
         and the restored in-flight tasks drive the submit-per-completion
-        loop forward."""
+        loop forward.  scorer: an ``InferenceClient`` on the fabric's
+        scorer shard; each submission then ranks
+        ``cfg.score_candidates`` candidate inputs through it and submits
+        the best-scored one (the paper's ML-in-the-loop steering)."""
         super().__init__(queues)
         self.cfg = cfg
+        self.scorer = scorer
+        self.scored = 0
         self.results = []
         self.submitted = submitted
         self.completed = completed
@@ -85,13 +134,27 @@ class SynThinker(BaseThinker):
         self._sub_lock = threading.Lock()
         self._ckpt_due = False
 
-    def _payload(self, idx: int):
+    def _payload(self, idx: int, cand: int = 0):
         # unique (non-cacheable) input, keyed by submission index so a
         # resumed run continues the stream instead of replaying payloads
         # the original incarnation already sent
-        rng = np.random.default_rng((self.cfg.seed, idx))
+        rng = np.random.default_rng((self.cfg.seed, idx, cand))
         return rng.integers(0, 255, size=self.cfg.I,
                             dtype=np.uint8).tobytes()
+
+    def _choose(self, idx: int) -> bytes:
+        """Steered submission: score ``score_candidates`` candidate
+        inputs through the proxy-model shard (one request per candidate;
+        the shard micro-batches them) and return the best one."""
+        k = self.cfg.score_candidates
+        if self.scorer is None or k <= 1:
+            return self._payload(idx)
+        cands = [self._payload(idx, c) for c in range(k)]
+        prompts = [list(c[:16]) for c in cands]
+        results = self.scorer.infer(prompts, max_new=4, timeout=60.0)
+        scores = [r.value[-1] if r.success else -1 for r in results]
+        self.scored += k
+        return cands[int(np.argmax(scores))]
 
     def _submit(self) -> bool:
         with self._sub_lock:
@@ -100,8 +163,11 @@ class SynThinker(BaseThinker):
             idx = self.submitted
             self.submitted += 1
             # send inside the lock: count and envelope move together
-            # relative to any concurrent checkpoint
-            self.queues.send_task(self._payload(idx), self.cfg.D,
+            # relative to any concurrent checkpoint.  Scoring sits
+            # inside too -- the candidates' infer round trip must not
+            # race a checkpoint either, or the snapshot could capture
+            # the scorer requests without the submission they feed
+            self.queues.send_task(self._choose(idx), self.cfg.D,
                                   self.cfg.O, method="syntask",
                                   topic="syntask")
         return True
@@ -172,10 +238,14 @@ def _cluster_spec(cfg: SynConfig):
         for i in range(cfg.vs_shards):
             h = pool_hosts[i % len(pool_hosts)]
             shards[h] = shards.get(h, 0) + 1
+    infer = cfg.inference_shards if cfg.score_candidates else 0
     hosts = [HostSpec(f"h{i}", thinker=(i == 0),
                       pools=({"syntask": workers[i]} if workers.get(i)
                              else {}),
-                      vs_shards=shards.get(i, 0))
+                      vs_shards=shards.get(i, 0),
+                      # scorer shards sit with the Thinker's host so the
+                      # steering round trip stays broker-local
+                      inference_shards=(infer if i == 0 else 0))
              for i in range(k)]
     return ClusterSpec(hosts, lease_timeout=cfg.lease_timeout,
                        vs_replicas=(cfg.vs_replicas if cfg.use_value_server
@@ -192,22 +262,29 @@ def _run_cluster(cfg: SynConfig, progress, resume_from: str = "",
     their namesakes)."""
     from repro.core.cluster import ClusterLauncher
     threshold = cfg.proxy_threshold if cfg.use_value_server else None
+    serve = _serve_spec(cfg) if cfg.score_candidates else None
     launcher = ClusterLauncher(
         _cluster_spec(cfg),
         methods=[(syntask, {"topic": "syntask"})],
-        proxy_threshold=threshold)
+        proxy_threshold=threshold, serve_spec=serve)
     t0 = time.perf_counter()
     with launcher:
         vs = launcher.value_server() if cfg.use_value_server else None
         queues = launcher.connect(["syntask"], value_server=vs,
-                                  proxy_threshold=threshold)
+                                  proxy_threshold=threshold,
+                                  serve_spec=serve)
+        scorer = None
+        if serve is not None:
+            from repro.serving.shard import InferenceClient
+            scorer = InferenceClient(queues)
         try:
             if resume_from:
                 progress = queues.resume(resume_from, payload=ckpt_payload)
                 cfg.T = progress.get("T", cfg.T)
             thinker = SynThinker(queues, cfg,
                                  submitted=progress["submitted"],
-                                 completed=progress["completed"])
+                                 completed=progress["completed"],
+                                 scorer=scorer)
             thinker.run(timeout=600)
             makespan = time.perf_counter() - t0
         finally:
@@ -254,10 +331,32 @@ def run_synapp(cfg: SynConfig, resume_from: str = ""):
         vs = ShardedValueServer(cfg.vs_shards, replicas=cfg.vs_replicas)
     else:
         vs = ValueServer()
+    serve = _serve_spec(cfg) if cfg.score_candidates else None
     queues = ColmenaQueues(
         ["syntask"], backend=cfg.backend, value_server=vs,
         proxy_threshold=cfg.proxy_threshold if cfg.use_value_server
-        else None, lease_timeout=cfg.lease_timeout)
+        else None, lease_timeout=cfg.lease_timeout, serve_spec=serve)
+    scorer = None
+    shard_procs: list = []
+    serve_thread = None
+    if serve is not None:
+        from repro.serving.shard import (InferenceClient, ServeLoop,
+                                         start_inference_shard)
+        scorer = InferenceClient(queues)
+        if proc:
+            shard_procs = [
+                start_inference_shard(queues.transport.address, serve,
+                                      lease_timeout=cfg.lease_timeout,
+                                      identity=f"infer@proc:{i}")
+                for i in range(max(cfg.inference_shards, 1))]
+        else:
+            # local backend: no process to fork -- serve the proxy model
+            # from a thread over the same in-process transport
+            loop = ServeLoop(queues.transport, serve,
+                             identity="infer@local:0")
+            serve_thread = threading.Thread(target=loop.run, daemon=True,
+                                            name="synapp-scorer")
+            serve_thread.start()
     progress = {"submitted": 0, "completed": 0}
     if resume_from:
         progress = queues.resume(resume_from, payload=ckpt_payload)
@@ -268,13 +367,27 @@ def run_synapp(cfg: SynConfig, resume_from: str = ""):
         server = TaskServer(queues, workers_per_topic=cfg.N)
     server.register(syntask, topic="syntask")
     thinker = SynThinker(queues, cfg, submitted=progress["submitted"],
-                         completed=progress["completed"])
+                         completed=progress["completed"], scorer=scorer)
     t0 = time.perf_counter()
     try:
         with server:
             thinker.run(timeout=600)
         makespan = time.perf_counter() - t0
     finally:
+        if serve is not None:
+            # graceful: one stop marker per consumer of the serve topic
+            from repro.serving.shard import send_shard_stop
+            try:
+                send_shard_stop(queues.transport, serve.topic,
+                                n=len(shard_procs) or 1)
+            except (ConnectionError, OSError):
+                pass
+            if serve_thread is not None:
+                serve_thread.join(timeout=5)
+            for p in shard_procs:
+                p.join(timeout=5)
+                if p.is_alive():
+                    p.terminate()
         queues.shutdown()
         if vs is not None and hasattr(vs, "shutdown"):
             vs.shutdown()
@@ -301,6 +414,8 @@ def _metrics(cfg: SynConfig, thinker: SynThinker, makespan: float):
         "utilization": busy / (cfg.N * makespan) if makespan else 0.0,
         "n_results": n,
         "completed_total": thinker.completed,
+        # steering: candidate inputs ranked through the scorer shard
+        "scored": thinker.scored,
         # cluster runs: which hosts actually executed work (from the
         # winning worker identities)
         "hosts_seen": sorted({r.worker.split("/", 1)[0]
@@ -324,6 +439,12 @@ def main(argv=None):
     p.add_argument("--vs-replicas", type=int, default=1, metavar="R",
                    help="Value Server replica factor (>=2 keeps keys "
                         "readable through a shard/node loss)")
+    p.add_argument("--score-candidates", type=int, default=0, metavar="C",
+                   help="rank C candidate inputs per task through the "
+                        "proxy-model inference shard and submit the best "
+                        "(ML-in-the-loop steering)")
+    p.add_argument("--inference-shards", type=int, default=1,
+                   help="scorer shard processes (proc/cluster backends)")
     p.add_argument("--checkpoint-every", type=int, default=0, metavar="K",
                    help="checkpoint the fabric every K results")
     p.add_argument("--ckpt", default="synapp.ckpt",
@@ -335,17 +456,20 @@ def main(argv=None):
                     backend=args.backend, cluster_hosts=args.cluster,
                     use_value_server=not args.no_value_server,
                     vs_replicas=args.vs_replicas,
+                    score_candidates=args.score_candidates,
+                    inference_shards=args.inference_shards,
                     checkpoint_every=args.checkpoint_every,
                     checkpoint_path=args.ckpt)
     res = run_synapp(cfg, resume_from=args.resume)
     hosts = (f"  hosts {','.join(res['hosts_seen'])}"
              if args.cluster else "")
+    scored = f"  scored {res['scored']}" if res["scored"] else ""
     print(f"completed {res['completed_total']}/{cfg.T} "
           f"({res['n_results']} this run)  "
           f"makespan {res['makespan']:.2f}s  "
           f"per-task wall {res['per_task_wall']*1e3:.2f}ms  "
           f"median overhead {res['total_overhead_median']*1e3:.2f}ms"
-          f"{hosts}")
+          f"{hosts}{scored}")
     return res
 
 

@@ -61,7 +61,8 @@ class ClusterLauncher:
                  straggler_factor: Optional[float] = None,
                  straggler_min_history: int = 5,
                  vs_capacity_bytes: Optional[int] = None,
-                 vs_spill: bool = False):
+                 vs_spill: bool = False,
+                 serve_spec=None):
         """methods: ``[(fn, register_kwargs), ...]`` applied to every
         host pool (fn may be a ``"module:qualname"`` string for the ssh
         path).  proxy_threshold: forwarded to every host agent so
@@ -70,9 +71,25 @@ class ClusterLauncher:
         side.  straggler_factor / straggler_min_history: enable each
         host pool's straggler monitor (backups then prefer a different
         host).  vs_capacity_bytes / vs_spill: per-shard memory bound and
-        spill-to-disk tier for the cluster's Value Server shards."""
+        spill-to-disk tier for the cluster's Value Server shards.
+        serve_spec: a ``repro.serving.shard.ServeSpec`` for the hosts
+        that declare ``inference_shards`` (required iff any does); its
+        topic must match ``spec.serve_topic`` so the partition homes the
+        serving traffic where the shards drain it."""
         self.spec = spec
         self.methods = list(methods)
+        self.serve_spec = serve_spec
+        if spec.inference_hosts:
+            if serve_spec is None:
+                raise ValueError(
+                    f"hosts {spec.inference_hosts} declare inference"
+                    " shards but the launcher got no serve_spec")
+            if serve_spec.topic != spec.serve_topic:
+                raise ValueError(
+                    f"serve_spec.topic {serve_spec.topic!r} !="
+                    f" spec.serve_topic {spec.serve_topic!r}: the"
+                    " partition would home the traffic away from the"
+                    " shards")
         self.proxy_threshold = proxy_threshold
         self.straggler_factor = straggler_factor
         self.straggler_min_history = straggler_min_history
@@ -82,6 +99,7 @@ class ClusterLauncher:
         self._brokers: Dict[str, _mp.Process] = {}
         self._agents: Dict[str, _mp.Process] = {}
         self._shards: list = []             # [{host, idx, sid, proc, addr}]
+        self._infer_shards: list = []       # [{host, idx, proc}]
         self._next_sid = 0
         self.vs_addresses: list = []
         self._dir: Optional[str] = None
@@ -129,6 +147,12 @@ class ClusterLauncher:
                 self._start_shard(h.name, i)
         if self._shards:
             self._push_vs_ring()
+        # 2b) inference shards: forked and supervised like VS shards,
+        # but they are *consumers* -- each dials its host's local broker
+        # and drains the serve topic (homed there by the partition)
+        for h in spec.hosts:
+            for i in range(h.inference_shards):
+                self._start_infer_shard(h.name, i)
         # 3) host agents (simulated hosts; ssh hosts are started by the
         # operator with ssh_commands)
         for h in spec.hosts:
@@ -158,6 +182,17 @@ class ClusterLauncher:
                  "addr": addr}
         self._shards.append(entry)
         self.vs_addresses.append(addr)
+        return entry
+
+    def _start_infer_shard(self, host: str, idx: int) -> dict:
+        from repro.serving.shard import start_inference_shard
+        p = start_inference_shard(
+            self._addresses[self.spec.local_broker_of(host)],
+            self.serve_spec,
+            lease_timeout=self.spec.lease_timeout,
+            identity=f"infer@{host}:{idx}")
+        entry = {"host": host, "idx": idx, "proc": p}
+        self._infer_shards.append(entry)
         return entry
 
     def _live_shards(self) -> list:
@@ -312,14 +347,20 @@ class ClusterLauncher:
 
     def kill_host(self, host: str) -> None:
         """Chaos: SIGKILL the host's whole process group (agent + its
-        forked workers -- a node loss) AND its Value Server shard
-        processes (they live on that node too), then start the rescue
-        drain.  With ``spec.vs_replicas >= 2`` the dead shards' keys
-        stay readable via their ring successors; ``restore_host_shards``
-        brings the replica factor back afterwards."""
+        forked workers -- a node loss) AND its Value Server and
+        inference shard processes (they live on that node too), then
+        start the rescue drain.  With ``spec.vs_replicas >= 2`` the dead
+        VS shards' keys stay readable via their ring successors;
+        ``restore_host_shards`` / ``restore_host_inference_shards``
+        bring the capacity back afterwards.  A killed inference shard's
+        in-flight request leases expire and redeliver to surviving
+        shards; rows it already streamed out are deduped by the result
+        claim."""
         self.spec.host(host)                # typo'd names raise, not no-op
         if (host not in self._agents
-                and not any(e["host"] == host for e in self._shards)):
+                and not any(e["host"] == host for e in self._shards)
+                and not any(e["host"] == host
+                            for e in self._infer_shards)):
             raise ValueError(
                 f"host {host!r} runs neither a pool agent nor shards:"
                 " nothing to kill (a silent no-op here would let a chaos"
@@ -335,8 +376,26 @@ class ClusterLauncher:
             if e["host"] == host and e["proc"].is_alive():
                 e["proc"].kill()
                 e["proc"].join(timeout=2)
+        for e in self._infer_shards:
+            if e["host"] == host and e["proc"].is_alive():
+                e["proc"].kill()
+                e["proc"].join(timeout=2)
         if p is not None:
             self._start_rescue(host)
+
+    def restore_host_inference_shards(self, host: str) -> list:
+        """Refork every dead inference shard on ``host``.  No ring or
+        state to rebuild: a shard is a stateless consumer, and the
+        requests its predecessor died holding redeliver by lease expiry
+        (to surviving shards, or to these replacements).  Returns the
+        replacement entries."""
+        dead = [e for e in self._infer_shards
+                if e["host"] == host and not e["proc"].is_alive()]
+        replaced = []
+        for e in dead:
+            self._infer_shards.remove(e)
+            replaced.append(self._start_infer_shard(host, e["idx"]))
+        return replaced
 
     def restore_host_shards(self, host: str) -> list:
         """Launcher-driven shard recovery: for every dead shard on
@@ -392,6 +451,14 @@ class ClusterLauncher:
                 except (ProcessLookupError, PermissionError):
                     pass
                 p.join(timeout=2)
+        for e in self._infer_shards:
+            if e["proc"].is_alive():
+                e["proc"].terminate()   # SIGTERM: shard exits its loop
+        for e in self._infer_shards:
+            e["proc"].join(timeout=5)
+            if e["proc"].is_alive():
+                e["proc"].kill()
+                e["proc"].join(timeout=2)
         for e in self._shards:
             try:
                 frames.FrameClient(e["addr"]).request({"op": "shutdown"})

@@ -49,6 +49,7 @@ class HostSpec:
     broker: bool = True
     pools: Dict[str, int] = field(default_factory=dict)  # topic -> workers
     vs_shards: int = 0
+    inference_shards: int = 0    # continuous-batching serving processes
     thinker: bool = False
     address: Optional[tuple] = None
     ssh: Optional[str] = None
@@ -60,7 +61,8 @@ class ClusterSpec:
                  lease_timeout: float = 30.0,
                  snapshot_every: float = 0.0,
                  snapshot_path: str = "",
-                 vs_replicas: int = 1):
+                 vs_replicas: int = 1,
+                 serve_topic: str = "infer"):
         """partition: explicit topic -> home-broker-host overrides (the
         derived default homes each topic at its first pool host).
         snapshot_every/snapshot_path: periodic auto-snapshot of the
@@ -68,7 +70,11 @@ class ClusterSpec:
         vs_replicas: copies of every Value Server key across the shard
         ring (>=2 keeps keys readable through a shard/node loss; the
         launcher pushes the factor to the shards with the ring, so every
-        connected client replicates identically)."""
+        connected client replicates identically).
+        serve_topic: the inference request topic, relevant only when a
+        host declares ``inference_shards``: the partition homes it at
+        the first such host's broker so serving traffic stays on-host,
+        and ``topics()`` registers it for connecting clients."""
         if not hosts:
             raise ValueError("a ClusterSpec needs at least one host")
         if vs_replicas < 1:
@@ -80,6 +86,11 @@ class ClusterSpec:
                 " declared Value Server shard(s): a replica factor above"
                 " the shard count cannot be satisfied")
         self.vs_replicas = vs_replicas
+        self.serve_topic = serve_topic
+        bad_infer = [h.name for h in hosts if h.inference_shards < 0]
+        if bad_infer:
+            raise ValueError(
+                f"negative inference_shards on hosts {bad_infer}")
         names = [h.name for h in hosts]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate host names in spec: {names}")
@@ -148,7 +159,14 @@ class ClusterSpec:
             for t in h.pools:
                 if t not in seen:
                     seen.append(t)
+        if self.inference_hosts and self.serve_topic not in seen:
+            seen.append(self.serve_topic)
         return seen
+
+    @property
+    def inference_hosts(self) -> List[str]:
+        """Hosts running inference shards, in spec order."""
+        return [h.name for h in self.hosts if h.inference_shards > 0]
 
     def pool_hosts(self, topic: str) -> List[str]:
         """Hosts running a pool for ``topic``, in spec order -- each
@@ -170,6 +188,13 @@ class ClusterSpec:
             home = None
             for h in self.hosts:
                 if topic in h.pools and h.broker:
+                    home = h.name
+                    break
+                if (topic == self.serve_topic and h.inference_shards
+                        and h.broker):
+                    # serving traffic is homed with its first shard host
+                    # for the same reason pool topics are: the shard's
+                    # drain loop stays broker-local
                     home = h.name
                     break
             part[topic] = home or self.coordinator

@@ -65,7 +65,8 @@ class ColmenaQueues:
                  release_inputs: bool = True,
                  lease_timeout: Optional[float] = None,
                  snapshot_every: float = 0.0,
-                 snapshot_path: str = ""):
+                 snapshot_path: str = "",
+                 serve_spec=None):
         """backend: "local" (in-process deques) or "proc" (socket broker
         process); ignored when an explicit ``transport`` is given.
         release_inputs: delete one-shot proxied task inputs from the
@@ -78,6 +79,11 @@ class ColmenaQueues:
         (pool workers heartbeat); it also bounds how long a resumed
         campaign waits before re-running work that was in flight at the
         checkpoint.
+        serve_spec: a ``repro.serving.shard.ServeSpec`` declaring the
+        fabric's inference topic -- registers the topic's queue pair and
+        makes it ``send_inference``'s default destination.  The shards
+        that drain it are forked by the cluster launcher (or
+        ``start_inference_shard``); this side only routes requests.
         snapshot_every/snapshot_path (proc backend): the forked broker
         auto-snapshots its whole state to ``snapshot_path`` every
         ``snapshot_every`` seconds (atomic tmp+rename) -- long campaigns
@@ -103,6 +109,10 @@ class ColmenaQueues:
         self.transport = transport
         self.backend = self.transport.name
         self._topics = {t: TopicQueue(self.transport, t) for t in topics}
+        self.serve_spec = serve_spec
+        if serve_spec is not None and serve_spec.topic not in self._topics:
+            self._topics[serve_spec.topic] = TopicQueue(self.transport,
+                                                        serve_spec.topic)
         self.value_server = value_server
         self.proxy_threshold = proxy_threshold
         self.release_inputs = release_inputs
@@ -126,7 +136,11 @@ class ColmenaQueues:
                    **kwargs)
 
     def topics(self):
-        return list(self._topics)
+        """Worker-pool topics.  The serve topic is excluded: it is
+        drained by inference shards, and a Task Server intake on it
+        would steal requests the shards are supposed to micro-batch."""
+        skip = None if self.serve_spec is None else self.serve_spec.topic
+        return [t for t in self._topics if t != skip]
 
     def wake_all(self) -> None:
         """Wake every blocked consumer (used on shutdown/done events)."""
@@ -293,6 +307,32 @@ class ColmenaQueues:
             self._active += 1
         self._topics[task.topic].requests.put(Envelope(now(), data, meta))
         return task.task_id
+
+    @property
+    def serve_topic(self) -> str:
+        if self.serve_spec is None:
+            raise ValueError(
+                "no serve_spec declared: pass serve_spec= to ColmenaQueues"
+                " (or an explicit topic= to send_inference)")
+        return self.serve_spec.topic
+
+    def send_inference(self, tokens, *, max_new: Optional[int] = None,
+                       topic: Optional[str] = None) -> str:
+        """Enqueue one inference request (a token-id prompt) on the
+        serve topic and return its task id.  The draining inference
+        shard buckets it by prompt length into a pad-bounded micro-batch
+        with whatever else is queued -- possibly other clients' traffic
+        -- and streams the generated ids back as an ordinary ``Result``
+        on the topic's result queue (``value`` = generated token list).
+        ``serving.shard.InferenceClient`` wraps this with transparent
+        split/reassemble over many prompts.  Exactly-once, lease
+        redelivery, and checkpoint/resume apply exactly as for
+        ``send_task``: this *is* a task, just served by a shard instead
+        of a worker pool."""
+        return self.send_task(method="infer",
+                              topic=topic or self.serve_topic,
+                              tokens=[int(t) for t in tokens],
+                              max_new=max_new)
 
     def _decode_result(self, env: Envelope) -> msg.Result:
         result: msg.Result = msg.deserialize(env.data)

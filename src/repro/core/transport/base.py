@@ -225,6 +225,28 @@ class Channel:
         thread that keeps the lease alive via ``renew``."""
         raise NotImplementedError
 
+    def detach_lease(self) -> Optional[int]:
+        """Take over lease lifetime management: return the calling
+        thread's held lease id and clear it, so the next ``get_batch``
+        on this thread does NOT implicitly commit it (the poll-is-commit
+        backstop only covers leases the thread still holds).  The caller
+        becomes responsible for eventually ``ack_lease``-ing the id (or
+        letting it expire and redeliver).  This is what lets a single
+        intake thread keep draining while earlier batches are still
+        executing -- e.g. an inference shard admitting new requests
+        between decode steps of in-flight micro-batches."""
+        raise NotImplementedError
+
+    def ack_lease(self, lease_id: Optional[int],
+                  flush: bool = False) -> None:
+        """Acknowledge an explicit (detached) lease id: its envelopes
+        are safely handed off and must never be redelivered.  Leases are
+        addressed by (topic, kind, id), so any thread of the channel may
+        ack them.  ``lease_id=None`` is a no-op; acking an id that
+        already expired is a no-op (the redelivered re-execution will be
+        deduped by the publisher's claim)."""
+        raise NotImplementedError
+
     def renew(self, lease_id: Optional[int] = None) -> bool:
         """Extend a lease's expiry by another full ``lease_timeout``
         from now.  ``lease_id=None`` renews the calling thread's held

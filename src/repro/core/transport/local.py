@@ -137,6 +137,18 @@ class LocalChannel(Channel):
     def held_lease(self) -> Optional[int]:
         return getattr(self._tls, "held", None)
 
+    def detach_lease(self) -> Optional[int]:
+        held = getattr(self._tls, "held", None)
+        self._tls.held = None
+        return held
+
+    def ack_lease(self, lease_id: Optional[int],
+                  flush: bool = False) -> None:
+        if lease_id is None:
+            return
+        with self._cond:
+            self._leases.pop(lease_id, None)  # already expired: no-op
+
     def renew(self, lease_id: Optional[int] = None) -> bool:
         lid = lease_id if lease_id is not None else self.held_lease()
         if lid is None:

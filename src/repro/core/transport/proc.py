@@ -105,6 +105,19 @@ class ProcChannel(Channel):
     def held_lease(self) -> Optional[int]:
         return getattr(self._tls, "held", None)
 
+    def detach_lease(self) -> Optional[int]:
+        held = getattr(self._tls, "held", None)
+        self._tls.held = None
+        return held
+
+    def ack_lease(self, lease_id: Optional[int],
+                  flush: bool = False) -> None:
+        if lease_id is None:
+            return
+        self._t.queue_ack((self.topic, self.kind, lease_id))
+        if flush:
+            self._t.flush_acks()
+
     def renew(self, lease_id: Optional[int] = None) -> bool:
         """Heartbeat a lease (the holder's, or an explicit id handed to
         a heartbeat thread -- leases are addressed by (topic, kind, id),

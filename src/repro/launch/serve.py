@@ -39,9 +39,10 @@ def main():
         out = engine.generate(prompts)
         print(f"round {r}: in {prompts.shape} -> out {out.shape}, "
               f"sample tail: {out[0, -8:].tolist()}")
-    print(f"throughput: {engine.throughput():.1f} tok/s "
+    print(f"steady-state throughput: {engine.throughput():.1f} tok/s "
           f"(prefills={engine.stats['prefill_calls']}, "
-          f"decode_steps={engine.stats['decode_steps']})")
+          f"decode_steps={engine.stats['decode_steps']}, "
+          f"compile {engine.stats['compile_wall']:.2f}s excluded)")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,9 @@
-from repro.serving import engine  # noqa: F401
+"""Model serving: the batched KV-cache engine and the inference-shard
+fabric role.
+
+Import submodules explicitly -- ``repro.serving.engine`` pulls in jax,
+while ``repro.serving.shard`` / ``repro.serving.batcher`` are
+deliberately jax-free at import time so fabric processes can declare a
+``ServeSpec`` (or run the client side) without loading the accelerator
+stack.  The shard process builds its engine lazily after the fork.
+"""
