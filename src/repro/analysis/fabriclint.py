@@ -501,6 +501,28 @@ def pass_frame_header_hygiene(ctx: FileCtx) -> List[Finding]:
                             "serialized blob embedded in a wire header; "
                             "payload bytes ride the frame body, headers "
                             "stay primitive"))
+    # the shm descriptor is a header field like any other: the value
+    # stored under "shm" (frame header) or "_shm" (envelope meta) must
+    # stay the flat {"name", "size"} dict create_segment hands back --
+    # a serialized blob there would smuggle the payload back into the
+    # header the lane exists to keep it out of
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        tgt = node.targets[0]
+        if not (isinstance(tgt, ast.Subscript)
+                and isinstance(tgt.slice, ast.Constant)
+                and tgt.slice.value in ("shm", "_shm")):
+            continue
+        for sub in ast.walk(node.value):
+            if (isinstance(sub, ast.Call)
+                    and _terminal_name(sub.func) in _BLOB_MAKERS) \
+                    or isinstance(sub, ast.Lambda):
+                out.append(Finding(
+                    "frame-header-hygiene", ctx.rel, sub.lineno,
+                    "shm descriptor must stay a flat dict of primitives "
+                    "(create_segment's {name, size}); payload bytes "
+                    "belong in the segment, not its descriptor"))
     if ctx.rel.replace("\\", "/").endswith(RELAY_MODULES):
         for node in ast.walk(ctx.tree):
             if not (isinstance(node, ast.Call)
@@ -523,6 +545,86 @@ def pass_frame_header_hygiene(ctx: FileCtx) -> List[Finding]:
     return out
 
 
+# modules that OWN shm segments (may unlink; their reads cannot race an
+# unlink because destruction is their own, locked decision).  Everyone
+# else is a producer (creates, hands off, never unlinks post-handoff)
+# or a consumer (maps and reads, never unlinks).
+_SHM_OWNER_MODULES = ("transport/broker.py",)
+
+
+def _catches_oserror(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True                     # bare except covers OSError
+    names = {_terminal_name(sub) for sub in ast.walk(t)}
+    return bool(names & {"OSError", "IOError", "FileNotFoundError",
+                         "Exception", "BaseException"})
+
+
+def pass_shm_segment_lifecycle(ctx: FileCtx) -> List[Finding]:
+    """The shared-memory lane's ownership protocol (see transport/shm.py):
+    producers create and hand off, the broker owns from receipt to
+    envelope destruction, consumers only map and read.  This pass checks
+    the call-site side of that contract -- a creator without an inline
+    fallback turns an optimization into a correctness dependency, a
+    consumer that unlinks destroys a segment the broker may redeliver,
+    and an unguarded consumer read crashes on the benign expired-lease
+    race instead of dropping the raced copy."""
+    rel = ctx.rel.replace("\\", "/")
+    if rel.endswith("transport/shm.py"):
+        return []                       # the primitives themselves
+    owner = rel.endswith(_SHM_OWNER_MODULES)
+    out = []
+    create_calls = []
+    calls_sweep = False
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = _terminal_name(node.func)
+        if fname == "sweep_scope":
+            calls_sweep = True
+        elif fname == "create_segment":
+            create_calls.append(node)
+            guarded = any(
+                isinstance(anc, ast.Try)
+                and any(_catches_oserror(h) for h in anc.handlers)
+                for anc in ctx.ancestors(node))
+            if not guarded:
+                out.append(_find(
+                    ctx, "shm-segment-lifecycle", node,
+                    "create_segment without an OSError fallback: the shm "
+                    "lane is an optimization -- a full or missing "
+                    "namespace must fall back to inline payloads, not "
+                    "fail the send"))
+        elif fname == "read_segment" and not owner:
+            guarded = any(
+                isinstance(anc, ast.Try)
+                and any(_catches_oserror(h) for h in anc.handlers)
+                for anc in ctx.ancestors(node))
+            if not guarded:
+                out.append(_find(
+                    ctx, "shm-segment-lifecycle", node,
+                    "consumer read_segment without an OSError guard: an "
+                    "expired lease's other copy may be acked (segment "
+                    "destroyed) under this reader -- drop the raced "
+                    "copy, don't crash the consumer"))
+        elif fname == "unlink_segment" and not owner:
+            out.append(_find(
+                ctx, "shm-segment-lifecycle", node,
+                "unlink_segment outside the broker: segment ownership "
+                "transfers with the frame -- a producer-side unlink "
+                "after an ambiguous send destroys a delivered "
+                "envelope's payload; leaks are reclaimed by the scope "
+                "sweep instead"))
+    if create_calls and not calls_sweep:
+        out.append(_find(
+            ctx, "shm-segment-lifecycle", create_calls[0],
+            "module creates segments but never sweeps its scope: a "
+            "producer that dies between create and handoff leaks the "
+            "segment until sweep_scope runs at fabric teardown"))
+    return out
+
+
 PASSES: Dict[str, Callable[[FileCtx], List[Finding]]] = {
     "wait-needs-predicate": pass_wait_needs_predicate,
     "idempotent-retry-registry": pass_idempotent_retry_registry,
@@ -530,6 +632,7 @@ PASSES: Dict[str, Callable[[FileCtx], List[Finding]]] = {
     "thread-lifecycle": pass_thread_lifecycle,
     "monotonic-deadlines": pass_monotonic_deadlines,
     "frame-header-hygiene": pass_frame_header_hygiene,
+    "shm-segment-lifecycle": pass_shm_segment_lifecycle,
 }
 
 

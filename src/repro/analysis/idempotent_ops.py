@@ -19,6 +19,9 @@ Deliberately ABSENT (their call sites must not pass ``retry=True``):
   envelopes under a second lease and hide the failure.
 - ``renew`` / ``ack`` -- a lost renew is healed by the next heartbeat
   tick; acks are restored to the pending set and ride the next frame.
+- ``backup`` -- a resend of an applied straggler clone enqueues a
+  *second* clone; harmless (claim dedup) but wasteful, and the
+  straggler timer re-fires on its own if the first send truly died.
 """
 
 IDEMPOTENT_OPS = {
@@ -28,6 +31,8 @@ IDEMPOTENT_OPS = {
     "snapshot": "read-only serialization of broker state",
     "restore": "wholesale state replacement; the same snapshot twice "
                "converges to the same state",
+    "endpoints": "read-only topology advertisement (peer map, partition, "
+                 "machine, shm scope)",
     # value-server shard ops (transport/shards.py, cluster/launcher.py)
     "vs_ring": "read-only fetch of the current ring message",
     "vs_set_ring": "epoch-guarded install; shards keep the max epoch, so "
@@ -39,6 +44,10 @@ IDEMPOTENT_OPS = {
                  "applied delete converges",
     "vs_keys": "read-only key inventory",
     "vs_export": "read-only dump of one key's stored bytes + refcount",
+    "vs_expect": "epoch-guarded set union of incoming-key announcements; "
+                 "a resend converges to the same window",
+    "vs_end_expect": "epoch-guarded clear of the expect window; clearing "
+                     "twice == clearing once",
     "vs_snapshot": "read-only serialization of one shard's contents",
     "vs_stats": "read-only counter probe",
 }

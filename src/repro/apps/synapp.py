@@ -202,6 +202,12 @@ class SynThinker(BaseThinker):
             # yet counted -- a snapshot here would lose them on resume
             self._ckpt_due = True
         if self.completed >= self.cfg.T:
+            # done.set() suppresses the batch-boundary hook, so flush a
+            # pending checkpoint here -- at T every delivered result is
+            # counted, which is exactly the boundary the hook waits for
+            if self._ckpt_due:
+                self._ckpt_due = False
+                self._checkpoint()
             self.done.set()
         else:
             self._submit()

@@ -44,6 +44,10 @@ class AgentConfig:
     proxy_threshold: Optional[int] = None
     straggler_factor: Optional[float] = None
     straggler_min_history: int = 5
+    # extra environment for this host (ClusterSpec.env_for): applied to
+    # os.environ before the pool forks, so workers inherit it ahead of
+    # their first jax/XLA import
+    env: Dict[str, str] = field(default_factory=dict)
 
 
 def resolve_method(fn):
@@ -78,9 +82,8 @@ def build_pool(cfg: AgentConfig) -> ProcessPoolTaskServer:
         backup_hosts=dict(cfg.backup_hosts),
         straggler_factor=cfg.straggler_factor,
         straggler_min_history=cfg.straggler_min_history,
-        # cap the intake drain near this host's own worker count: a host
-        # that leased a 32-deep batch into its private dispatch channel
-        # would hoard work its peers' idle workers can't reach
+        # control-event drain batch, sized to this host's worker count
+        # (each in-flight task produces a couple of events)
         intake_batch=max(2 * max(cfg.pools.values(), default=1), 2))
     for fn, kwargs in cfg.methods:
         pool.register(resolve_method(fn), **kwargs)
@@ -90,6 +93,10 @@ def build_pool(cfg: AgentConfig) -> ProcessPoolTaskServer:
 def host_agent_main(cfg: AgentConfig) -> None:
     """Process entry: run the host's pools until SIGTERM."""
     os.setpgrp()                            # killpg takes workers with us
+    if cfg.env:
+        # before the pool forks: workers inherit this, and XLA-style
+        # variables only matter if set ahead of the first jax import
+        os.environ.update(cfg.env)
     stop = threading.Event()
     signal.signal(signal.SIGTERM, lambda *_: stop.set())
     pool = build_pool(cfg)

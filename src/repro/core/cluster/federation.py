@@ -79,13 +79,14 @@ class FederatedBroker:
     occupies its own connection on both sides."""
 
     def __init__(self, host: str, partition: Dict[str, str],
-                 peers: Dict[str, tuple]):
+                 peers: Dict[str, tuple], shm_scope: Optional[str] = None):
         self.host = host
         self.partition = dict(partition)
         self.broker_hosts = sorted(peers)
         if host not in peers:
             raise ValueError(f"own host {host!r} missing from peer map")
-        self.broker = Broker()
+        self.broker = Broker(shm_scope=shm_scope)
+        self.peer_addresses = dict(peers)
         self._peers = {h: frames.FrameClient(addr)
                        for h, addr in peers.items() if h != host}
 
@@ -178,11 +179,21 @@ class FederatedBroker:
             return self.broker.handle(header, payload)
         header = self._route_acks(header)
         op = header["op"]
-        if op in ("put", "get", "len", "renew"):
+        if op in ("put", "get", "len", "renew", "backup"):
             h = self.home(header["topic"])
             if h != self.host:
                 return self._relay(h, header, payload)
             return self.broker.handle(header, payload)
+        if op == "endpoints":
+            # advertise the whole federation so clients open their own
+            # connection to each topic's home broker (relay chains of
+            # length zero on the data plane); the relay path above stays
+            # as the compatibility fallback for clients that don't
+            import socket as socketlib
+            return {"host": self.host, "peers": dict(self.peer_addresses),
+                    "partition": dict(self.partition),
+                    "machine": socketlib.gethostname(),
+                    "scope": self.broker.shm_scope}, b""
         if op == "wake":
             self.fed_wake()
             return {"ok": True}, b""
@@ -203,16 +214,18 @@ class FederatedBroker:
 def federated_broker_main(sock, host: str, partition: Dict[str, str],
                           peers: Dict[str, tuple],
                           snapshot_every: float = 0.0,
-                          snapshot_path: Optional[str] = None) -> None:
+                          snapshot_path: Optional[str] = None,
+                          shm_scope: Optional[str] = None) -> None:
     """Entry point of one federation member's broker process.  Only the
     coordinator is given ``snapshot_every``: its auto-snapshot bundles
     the *whole federation* into one resumable file."""
-    fb = FederatedBroker(host, partition, peers)
+    fb = FederatedBroker(host, partition, peers, shm_scope=shm_scope)
     stop = threading.Event()
     if snapshot_every and snapshot_path:
         start_autosnapshot(fb.fed_snapshot, snapshot_every, snapshot_path,
                            stop)
     frames.serve_forever(sock, fb.handle, stop)
+    fb.broker.release_segments()
 
 
 __all__ = ["FederatedBroker", "federated_broker_main", "dump_fed_snapshot",

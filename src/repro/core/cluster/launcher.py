@@ -1,4 +1,4 @@
-"""Materialize a ClusterSpec: brokers, shards, host agents, supervision.
+"""Materialize a ClusterSpec: brokers, shards, host agents, teardown.
 
 ``ClusterLauncher`` turns the declarative spec into running processes:
 
@@ -16,21 +16,27 @@
    runs the host's ``ProcessPoolTaskServer`` -- the "simulated host".
    Real hosts instead run the same agent over ssh
    (``ssh_commands``/``write_agent_configs``);
-4. supervises the agents: a monitor notices a dead host and starts a
-   **rescue** drain that moves the dead host's still-queued dispatch
-   envelopes back to their global request topics (bytes verbatim), so
-   surviving hosts pick the work up.  In-flight leases held by the dead
-   host's workers expire on their own and land in the same drain;
-   completions the dead host already published are deduped by the claim
-   on the result put -- zero lost, zero duplicated, same as every other
-   failure mode in this fabric;
-5. tears everything down in reverse on ``stop`` (SIGTERM agents,
-   shutdown frames to shards and brokers).
+4. tears everything down in reverse on ``stop`` (SIGTERM agents,
+   shutdown frames to shards and brokers, a final shared-memory scope
+   sweep for segments no registry could see).
+
+Host failure needs no launcher-side rescue machinery on the direct
+data plane: queued work only ever lives on the global request topics at
+their home brokers (never relayed into per-host queues), and a dead
+host's workers merely leave unacked leases there -- which expire and
+redeliver to any surviving host's directly-subscribed workers.
+Completions the dead host already published are deduped by the claim on
+the result put: zero lost, zero duplicated, with nothing to supervise.
+
+Every broker member is forked with the same shared-memory **scope
+token**, so co-located clients can ride the shm payload lane
+(``transport.shm``) against any member, and ``stop`` can sweep exactly
+this cluster's leftover segments.
 
 The Thinker lives in the *caller's* process: ``connect()`` returns a
-``ColmenaQueues`` dialing the thinker host's broker (one relay hop for
-topics homed elsewhere -- by default a topic is homed with its first
-pool host, so steady-state task traffic is broker-local to its workers).
+``ColmenaQueues`` dialing the thinker host's broker; its channels
+discover the federation's endpoints and dial each topic's home broker
+directly, so steady-state task traffic takes zero relay hops end to end.
 """
 from __future__ import annotations
 
@@ -45,9 +51,8 @@ from typing import Dict, List, Optional
 from repro.core.cluster.agent import AgentConfig, host_agent_main
 from repro.core.cluster.federation import federated_broker_main
 from repro.core.cluster.spec import ClusterSpec, HostSpec
-from repro.core.process_pool import dispatch_topic
 from repro.core.queues import ColmenaQueues
-from repro.core.transport import frames
+from repro.core.transport import frames, shm
 from repro.core.transport.proc import ProcTransport
 
 import multiprocessing
@@ -104,9 +109,9 @@ class ClusterLauncher:
         self.vs_addresses: list = []
         self._dir: Optional[str] = None
         self._stop = threading.Event()
-        self._rescued: set = set()
         self._threads: list = []
         self._lock = threading.Lock()
+        self._shm_scope: Optional[str] = None
 
     # -- bring-up -----------------------------------------------------------
 
@@ -126,6 +131,11 @@ class ClusterLauncher:
             socks[name] = sock
             self._addresses[name] = addr
         partition = spec.partition()
+        # one shm scope for the whole cluster: every member advertises
+        # it (endpoints op), co-located clients ride the payload lane
+        # against any member, and stop() sweeps exactly these segments
+        if shm.shm_dir() is not None:
+            self._shm_scope = shm.new_scope()
         for name, sock in socks.items():
             every, path = 0.0, None
             if name == spec.coordinator and spec.snapshot_every:
@@ -133,7 +143,7 @@ class ClusterLauncher:
             p = _mp.Process(
                 target=federated_broker_main,
                 args=(sock, name, partition, dict(self._addresses),
-                      every, path),
+                      every, path, self._shm_scope),
                 daemon=True, name=f"colmena-broker-{name}")
             p.start()
             sock.close()
@@ -158,11 +168,6 @@ class ClusterLauncher:
         for h in spec.hosts:
             if h.pools and h.ssh is None:
                 self._start_agent(h)
-        # 4) supervision
-        th = threading.Thread(target=self._monitor_loop, daemon=True,
-                              name="cluster-monitor")
-        th.start()
-        self._threads.append(th)
         return self
 
     def _start_shard(self, host: str, idx: int) -> dict:
@@ -190,7 +195,8 @@ class ClusterLauncher:
             self._addresses[self.spec.local_broker_of(host)],
             self.serve_spec,
             lease_timeout=self.spec.lease_timeout,
-            identity=f"infer@{host}:{idx}")
+            identity=f"infer@{host}:{idx}",
+            env=self.spec.env_for(host) or None)
         entry = {"host": host, "idx": idx, "proc": p}
         self._infer_shards.append(entry)
         return entry
@@ -226,7 +232,8 @@ class ClusterLauncher:
             vs_addresses=list(self.vs_addresses) or None,
             proxy_threshold=self.proxy_threshold,
             straggler_factor=self.straggler_factor,
-            straggler_min_history=self.straggler_min_history)
+            straggler_min_history=self.straggler_min_history,
+            env=self.spec.env_for(h.name))
 
     def _start_agent(self, h: HostSpec) -> None:
         p = _mp.Process(target=host_agent_main, args=(self._agent_config(h),),
@@ -260,11 +267,19 @@ class ClusterLauncher:
     def ssh_commands(self, config_dir: str) -> Dict[str, List[str]]:
         """The command an operator (or a future auto-launcher) runs per
         real host: ship the host's config file there and exec the agent
-        module against it."""
+        module against it.  Host environment (perf-env idioms +
+        ``HostSpec.env``) rides an ``env`` prefix -- the exec path is
+        the one where ``LD_PRELOAD``-style variables actually bite."""
         paths = self.write_agent_configs(config_dir)
-        return {name: ["ssh", self.spec.host(name).ssh, sys.executable,
-                       "-m", "repro.core.cluster.agent", "--config", path]
-                for name, path in paths.items()}
+        out = {}
+        for name, path in paths.items():
+            env = self.spec.env_for(name)
+            prefix = (["env"] + [f"{k}={v}" for k, v in sorted(env.items())]
+                      if env else [])
+            out[name] = (["ssh", self.spec.host(name).ssh] + prefix
+                         + [sys.executable, "-m", "repro.core.cluster.agent",
+                            "--config", path])
+        return out
 
     # -- client-side wiring -------------------------------------------------
 
@@ -294,63 +309,16 @@ class ClusterLauncher:
         return ColmenaQueues(topics or self.spec.topics(),
                              transport=transport, **queues_kw)
 
-    # -- supervision / chaos ------------------------------------------------
-
-    def _monitor_loop(self) -> None:
-        while not self._stop.wait(0.25):
-            for name, p in list(self._agents.items()):
-                if not p.is_alive():
-                    self._start_rescue(name)
-
-    def _start_rescue(self, host: str) -> None:
-        """Idempotently begin draining a dead host's dispatch channels
-        back into the global request topics."""
-        with self._lock:
-            if host in self._rescued:
-                return
-            self._rescued.add(host)
-        th = threading.Thread(target=self._rescue_loop,
-                              args=(self.spec.host(host),),
-                              daemon=True, name=f"cluster-rescue-{host}")
-        th.start()
-        self._threads.append(th)
-
-    def _rescue_loop(self, h: HostSpec) -> None:
-        """The dead host's dispatch queues hold (a) envelopes its intake
-        relayed but no worker picked up, immediately drainable, and (b)
-        envelopes whose worker died holding the lease -- those surface
-        here when the lease expires (our own gets run the expiry).  Each
-        is re-put -- bytes verbatim -- on its topic's global request
-        queue, where a surviving host's intake leases it.  A completion
-        the dead worker managed to publish first makes the re-execution
-        lose the claim: exactly-once holds."""
-        t = ProcTransport(
-            address=self._addresses[self.spec.coordinator],
-            lease_timeout=self.spec.lease_timeout)
-        pairs = [(t.channel(dispatch_topic(h.name, topic), "tasks"),
-                  t.channel(topic, "requests")) for topic in h.pools]
-        while not self._stop.is_set():
-            for disp, req in pairs:
-                try:
-                    envs = disp.get_batch(32, timeout=0.25,
-                                          cancel=self._stop)
-                    if not envs:
-                        continue
-                    for env in envs:
-                        if env.meta.get("stop"):
-                            continue        # a shutdown marker, not work
-                        req.put(env)
-                    disp.ack()
-                except (ConnectionError, OSError, RuntimeError):
-                    return                  # fabric is gone
-        t.client.close()
+    # -- chaos ---------------------------------------------------------------
 
     def kill_host(self, host: str) -> None:
         """Chaos: SIGKILL the host's whole process group (agent + its
         forked workers -- a node loss) AND its Value Server and
-        inference shard processes (they live on that node too), then
-        start the rescue drain.  With ``spec.vs_replicas >= 2`` the dead
-        VS shards' keys stay readable via their ring successors;
+        inference shard processes (they live on that node too).  No
+        rescue follows: the dead workers' request-queue leases expire at
+        their home brokers and redeliver straight to surviving hosts'
+        directly-subscribed workers.  With ``spec.vs_replicas >= 2`` the
+        dead VS shards' keys stay readable via their ring successors;
         ``restore_host_shards`` / ``restore_host_inference_shards``
         bring the capacity back afterwards.  A killed inference shard's
         in-flight request leases expire and redeliver to surviving
@@ -380,8 +348,6 @@ class ClusterLauncher:
             if e["host"] == host and e["proc"].is_alive():
                 e["proc"].kill()
                 e["proc"].join(timeout=2)
-        if p is not None:
-            self._start_rescue(host)
 
     def restore_host_inference_shards(self, host: str) -> list:
         """Refork every dead inference shard on ``host``.  No ring or
@@ -478,6 +444,12 @@ class ClusterLauncher:
                 p.terminate()
         for th in self._threads:
             th.join(timeout=2)
+        if self._shm_scope is not None:
+            # brokers released live segments on graceful shutdown; this
+            # reclaims what no registry could see (producers that died
+            # pre-handoff, SIGKILLed members) -- safe only now, with
+            # every member down
+            shm.sweep_scope(self._shm_scope)
         if self._dir is not None:
             import shutil
             shutil.rmtree(self._dir, ignore_errors=True)

@@ -23,8 +23,49 @@ that inherit it, and the ssh hook ships it to real hosts as a file.
 from __future__ import annotations
 
 import hashlib
+import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
+
+# Where a tcmalloc shared object may live (Debian/Ubuntu layout).  The
+# perf-env idiom only sets LD_PRELOAD when one actually exists: pointing
+# the loader at a missing library stalls *every* exec on the host.
+_TCMALLOC_CANDIDATES = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+
+
+def perf_env_vars(n_local_workers: int) -> Dict[str, str]:
+    """The HPC launcher environment idioms, as data:
+
+    - ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` partitions
+      the host CPU into one XLA device per local worker, so jax-based
+      methods sharing a node each get a device instead of fighting over
+      one.
+    - tcmalloc via ``LD_PRELOAD`` (only when the library is actually
+      installed), with its large-alloc report threshold raised so
+      multi-GB device buffers don't spam stderr.
+    - ``TF_CPP_MIN_LOG_LEVEL=4`` silences XLA's C++ chatter on worker
+      stdout, which on a many-node run otherwise drowns the logs.
+
+    ``LD_PRELOAD`` takes effect on *exec* -- it reaches agents launched
+    over ssh (fresh interpreter) but not fork-only simulated hosts,
+    which inherit the launcher's already-loaded allocator.  The XLA and
+    logging variables just need to be set before the first jax/XLA
+    import and work on both paths."""
+    env = {
+        "XLA_FLAGS": ("--xla_force_host_platform_device_count="
+                      f"{max(n_local_workers, 1)}"),
+        "TF_CPP_MIN_LOG_LEVEL": "4",
+    }
+    for so in _TCMALLOC_CANDIDATES:
+        if os.path.exists(so):
+            env["LD_PRELOAD"] = so
+            env["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = "60000000000"
+            break
+    return env
 
 
 def host_hash_index(name: str, n: int) -> int:
@@ -43,7 +84,10 @@ class HostSpec:
     (``("tcp", host, port)``); None lets the launcher bind one on
     loopback for a simulated host.  ssh: the ssh destination the real
     multi-host hook targets (``user@node``); None means this host is
-    simulated as a local process group."""
+    simulated as a local process group.  env: extra environment
+    variables for this host's agent and inference shards, applied on
+    top of the spec-level perf-env idioms (``ClusterSpec(perf_env=)``)
+    so a per-host override always wins."""
 
     name: str
     broker: bool = True
@@ -53,6 +97,7 @@ class HostSpec:
     thinker: bool = False
     address: Optional[tuple] = None
     ssh: Optional[str] = None
+    env: Dict[str, str] = field(default_factory=dict)
 
 
 class ClusterSpec:
@@ -62,7 +107,8 @@ class ClusterSpec:
                  snapshot_every: float = 0.0,
                  snapshot_path: str = "",
                  vs_replicas: int = 1,
-                 serve_topic: str = "infer"):
+                 serve_topic: str = "infer",
+                 perf_env: bool = False):
         """partition: explicit topic -> home-broker-host overrides (the
         derived default homes each topic at its first pool host).
         snapshot_every/snapshot_path: periodic auto-snapshot of the
@@ -74,7 +120,12 @@ class ClusterSpec:
         serve_topic: the inference request topic, relevant only when a
         host declares ``inference_shards``: the partition homes it at
         the first such host's broker so serving traffic stays on-host,
-        and ``topics()`` registers it for connecting clients."""
+        and ``topics()`` registers it for connecting clients.
+        perf_env: apply the launcher performance-environment idioms
+        (``perf_env_vars``: per-worker XLA host devices, tcmalloc when
+        installed, quiet XLA logging) to every host's agent and
+        inference shards.  Off by default; ``HostSpec.env`` entries
+        override it per host either way."""
         if not hosts:
             raise ValueError("a ClusterSpec needs at least one host")
         if vs_replicas < 1:
@@ -87,6 +138,7 @@ class ClusterSpec:
                 " the shard count cannot be satisfied")
         self.vs_replicas = vs_replicas
         self.serve_topic = serve_topic
+        self.perf_env = perf_env
         bad_infer = [h.name for h in hosts if h.inference_shards < 0]
         if bad_infer:
             raise ValueError(
@@ -167,6 +219,20 @@ class ClusterSpec:
     def inference_hosts(self) -> List[str]:
         """Hosts running inference shards, in spec order."""
         return [h.name for h in self.hosts if h.inference_shards > 0]
+
+    def env_for(self, name: str) -> Dict[str, str]:
+        """The environment the launcher applies to ``name``'s agent and
+        inference shards: the perf-env idioms (when ``perf_env`` is on,
+        sized to the host's own worker + shard count) overlaid with the
+        host's explicit ``env`` map.  Empty when neither is set, so the
+        default path touches nothing."""
+        h = self.host(name)
+        env: Dict[str, str] = {}
+        if self.perf_env:
+            n = sum(h.pools.values()) + h.inference_shards
+            env.update(perf_env_vars(n))
+        env.update(h.env)
+        return env
 
     def pool_hosts(self, topic: str) -> List[str]:
         """Hosts running a pool for ``topic``, in spec order -- each

@@ -4,52 +4,66 @@ The thread-pool ``TaskServer`` gives concurrency; this one gives the
 paper's topology -- N *processes* per topic (Parsl workers), true
 parallelism for CPU-bound simulation tasks, and per-worker **identity**
 (``host/topic/wR/pidP``) so placement decisions are possible.  It requires
-the ``proc`` queue backend: the parent (dispatcher) and the workers only
+the ``proc`` queue backend: the parent (supervisor) and the workers only
 ever meet through the broker.
 
-Dispatch path (envelope bytes are *relayed*, never re-pickled)::
+Direct-subscription data plane (no relay in the dispatch path)::
 
-    Thinker --put--> topic requests --intake (parent)--> pool:<topic>
-            <--put-- topic results  <------------------- worker executes
+    Thinker --put--> topic requests --get--> worker executes --put--> results
+                          ^                     |
+                          |  control events     v
+                     supervisor  <---- pool@<host>:__control__
 
-The parent's intake thread records each in-flight envelope (keyed by the
-``task_id`` riding the envelope meta -- no unpickle on the hot path) and
-forwards the bytes verbatim to the pool's dispatch channel, which workers
-drain with blocking batched gets.  Workers report ``started`` / ``done``
-events on a control channel, giving the parent the per-task worker
-identity and runtime history.
+Workers subscribe **directly** to the topic's request queue at its home
+broker: each worker's leased ``get`` *is* the dispatch, and the lease it
+holds across the execution *is* the in-flight record.  The pool parent
+never touches an envelope -- it is a pure control-plane supervisor that
+watches ``started``/``retry``/``done`` events on a per-host control
+channel, keeps runtime history, and schedules straggler backups.  (The
+previous design relayed every envelope through a parent intake thread
+onto a per-host dispatch queue: one extra broker round-trip per task,
+and the parent held a copy of every in-flight payload.)
 
 Straggler mitigation with *placement*: when a task exceeds
-``straggler_factor`` x the topic's trailing-median runtime, the parent
-re-dispatches a backup with ``exclude_worker`` set to the identity that
-started the original -- a worker that sees its own identity excluded
-bounces the task back (the original is, by definition, still busy, so an
-idle *different* worker picks it up).  First completion wins: workers
-arbitrate via the broker's atomic ``claim`` op, so exactly one result per
-task id reaches the Thinker even though the racers live in different
-processes.
+``straggler_factor`` x the topic's trailing-median runtime, the
+supervisor asks the broker to **clone the leased envelope** back onto
+the queue (``Channel.backup`` -- the broker's lease ledger is the only
+place the bytes still live), with ``exclude_worker`` (and, when peer
+hosts pool the topic, ``exclude_host``) merged into the clone's meta.
+An excluded worker that picks the clone up bounces it -- re-puts the
+bytes verbatim with a bumped ``bounces`` count and acks, no unpickle --
+so an idle *different* worker (on a different host when one exists)
+executes the backup.  First completion wins: workers arbitrate via the
+claim fused into the result ``put``, so exactly one result per task id
+reaches the Thinker even though the racers live in different processes.
 
 Topology awareness: every pool carries a **host identity** (``host=``;
 defaults to the real hostname) that prefixes each worker identity and
-scopes the pool's dispatch/control channels (``pool@<host>:<topic>``),
-so in a multi-host federation worker <-> dispatch traffic stays on the
-worker's local broker.  ``backup_hosts`` names peer hosts running pools
-for the same topics: the straggler monitor then places backups on a
-*different host* than the original (round-robin over the peers) --
-surviving a whole-host slowdown, not just a slow process -- and falls
-back to the same-host exclude/bounce dance only when no peer exists.
+scopes the pool's control channel (``pool@<host>:__control__``), so each
+supervisor monitors exactly its own workers.  ``backup_hosts`` names
+peer hosts running pools for the same topics: a straggler backup then
+excludes the *whole origin host* (surviving a host-wide slowdown, not
+just a slow process -- the paper's Theta runs), falling back to
+same-host ``exclude_worker`` bouncing when no peer exists.
 
 Long tasks and leases: each worker runs a heartbeat thread that renews
-the dispatch-channel lease at half its timeout while a task executes,
-so work that legitimately outlives ``lease_timeout`` keeps its lease
+the request-queue lease at half its timeout while a task executes, so
+work that legitimately outlives ``lease_timeout`` keeps its lease
 instead of triggering a wasteful redelivery that the claim then has to
-dedup.  A SIGKILLed worker stops heartbeating, its lease expires, and
-the task redelivers -- exactly as before.
+dedup.  A SIGKILLed worker stops heartbeating, its lease expires at the
+home broker, and the task redelivers to any subscribed worker -- on any
+host -- with no supervisor involvement.
+
+Shutdown is a SIGTERM protocol (there are no stop envelopes: a stop
+riding a queue shared by every host's workers could land anywhere).  An
+idle worker's SIGTERM handler exits the process right there -- the
+interrupted blocking ``recv`` would otherwise just resume (PEP 475); a
+busy worker finishes its task, observes the flag, flushes and exits.
 
 Fault tolerance mirrors the thread server -- per-task retry with capped
 attempts, errors captured into the Result, one-shot Value-Server inputs
 released by the winning worker only -- and adds **exactly-once dispatch**
-on top of the transport's leases: a worker holds its dispatch-channel
+on top of the transport's leases: a worker holds its request-queue
 lease for the task's whole execution and only acks after the result is
 published, so a worker SIGKILLed mid-task (or a response frame lost with
 its connection) leaves an unacked lease that expires and redelivers the
@@ -71,6 +85,7 @@ from __future__ import annotations
 
 import os
 import pickle
+import signal
 import socket as socketlib
 import threading
 import time
@@ -91,18 +106,19 @@ POOL_PREFIX = "pool@"
 
 
 def dispatch_topic(host: str, topic: str) -> str:
-    """The per-host pool dispatch channel for ``topic``.  In a
-    federation the ``pool@<host>:`` prefix homes the channel at that
-    host's broker (``cluster.spec.resolve_home``), keeping worker <->
-    dispatch traffic on-host; cross-host straggler backups target a
-    *peer* host's channel by the same naming."""
+    """The per-host pool channel name for ``topic``.  The direct data
+    plane no longer dispatches through these (workers drain the global
+    topic queue at its home broker), but the naming -- and
+    ``cluster.spec.resolve_home``'s rule homing ``pool@<host>:`` topics
+    at that host's broker -- remains for the control channel below and
+    for anything host-scoped a deployment wants kept on-host."""
     return f"{POOL_PREFIX}{host}:{topic}"
 
 
 def control_topic(host: str) -> str:
-    """Per-host pool control channel: each parent monitors only its own
-    workers' events (a shared control topic across hosts would race on
-    leases and split events randomly between monitors)."""
+    """Per-host pool control channel: each supervisor monitors only its
+    own workers' events (a shared control topic across hosts would race
+    on leases and split events randomly between monitors)."""
     return f"{POOL_PREFIX}{host}:__control__"
 
 
@@ -123,11 +139,13 @@ class ProcessPoolTaskServer:
         per-topic sizes).  host: this pool's host identity; None uses
         the real hostname.  Simulated hosts sharing one machine pass
         distinct names so placement decisions stay meaningful.
+        intake_batch: control-event drain batch size (the name predates
+        the direct data plane, when it also sized the intake relay).
         backup_hosts: peer hosts running pools for the same topics --
-        straggler backups prefer one of them over the original's host.
-        Either a flat list (every topic) or a {topic: [hosts]} dict (a
-        backup must only target a host that actually pools its topic,
-        or the backup envelope would sit in an undrained channel)."""
+        a straggler backup excludes the origin host when one exists.
+        Either a flat list (every topic) or a {topic: [hosts]} dict (an
+        exclusion must only be total when *some* other host pools the
+        topic, or the backup would bounce forever)."""
         if queues.backend != "proc":
             raise ValueError(
                 "ProcessPoolTaskServer requires ColmenaQueues(backend='proc')"
@@ -170,9 +188,11 @@ class ProcessPoolTaskServer:
 
     # -- channels -------------------------------------------------------------
 
-    def _dispatch_channel(self, topic: str, host: Optional[str] = None):
-        return self.queues.transport.channel(
-            dispatch_topic(host or self.host, topic), "tasks")
+    def _request_channel(self, topic: str):
+        """The global request queue workers subscribe to -- the same
+        channel the Thinker publishes into, reached directly at its home
+        broker (``ProcTransport.client_for``)."""
+        return self.queues.transport.channel(topic, "requests")
 
     def _control_channel(self):
         return self.queues.transport.channel(control_topic(self.host),
@@ -197,10 +217,6 @@ class ProcessPoolTaskServer:
                                 daemon=True, name=f"pool-{topic}-w{rank}")
                 p.start()
                 self._procs.append(p)
-            th = threading.Thread(target=self._intake_loop, args=(topic,),
-                                  daemon=True, name=f"pool-intake-{topic}")
-            th.start()
-            self._threads.append(th)
         th = threading.Thread(target=self._monitor_loop, daemon=True,
                               name="pool-monitor")
         th.start()
@@ -214,20 +230,20 @@ class ProcessPoolTaskServer:
 
     def stop(self):
         self._stop.set()
-        try:
-            for topic in self.queues.topics():
-                ch = self._dispatch_channel(topic)
-                for _ in range(self._n_workers(topic)):
-                    ch.put(Envelope(now(), b"", {"stop": True}))
-        except (ConnectionError, OSError):
-            pass    # broker already dead: workers die with their sockets
+        # SIGTERM is the stop protocol: an idle worker exits inside its
+        # handler (its blocked recv would just resume otherwise), a busy
+        # one finishes its task first.  There are no stop envelopes --
+        # on a queue every host's workers share they could land anywhere.
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
         self.queues.wake_all()
         with self._lock:
             self._straggler_cond.notify_all()
         for p in self._procs:
             p.join(timeout=2)
             if p.is_alive():
-                p.terminate()
+                p.kill()
         for th in self._threads:
             th.join(timeout=2)
 
@@ -237,32 +253,7 @@ class ProcessPoolTaskServer:
     def __exit__(self, *exc):
         self.stop()
 
-    # -- parent side ----------------------------------------------------------
-
-    def _intake_loop(self, topic: str):
-        requests = self.queues._topics[topic].requests
-        dispatch = self._dispatch_channel(topic)
-        while not self._stop.is_set():
-            try:
-                envs = requests.get_batch(self.intake_batch,
-                                          cancel=self._stop)
-            except (ConnectionError, OSError):
-                return                      # broker died: fabric is gone
-            if not envs:
-                continue                    # woken for shutdown; loop checks
-            with self._lock:
-                for env in envs:
-                    tid = env.meta.get("task_id")
-                    if tid is not None:
-                        self._inflight[tid] = {
-                            "env": env, "topic": topic, "started": None,
-                            "worker": None, "backup_sent": False}
-                self._straggler_cond.notify_all()
-            for env in envs:
-                dispatch.put(env)           # bytes relayed verbatim
-            # every envelope is now on the pool dispatch queue (itself
-            # leased until a worker completes it): commit the intake lease
-            requests.ack()
+    # -- supervisor (control plane only) --------------------------------------
 
     def _monitor_loop(self):
         control = self._control_channel()
@@ -281,15 +272,23 @@ class ProcessPoolTaskServer:
                 for env in envs:
                     kind, tid, identity, topic, value = pickle.loads(env.data)
                     if kind == "started":
-                        info = self._inflight.get(tid)
-                        if info is not None:
-                            info["started"] = value
-                            info["worker"] = identity
+                        # the event carries everything a backup decision
+                        # needs: start time and the worker's lease id
+                        # (which addresses the envelope bytes the broker
+                        # still holds).  A backup execution registers
+                        # with backup_sent=True so it can never cascade
+                        # a backup-of-a-backup.
+                        t_start, lease, is_backup = value
+                        self._inflight[tid] = {
+                            "topic": topic, "started": t_start,
+                            "worker": identity, "lease": lease,
+                            "backup_sent": is_backup}
                         self.task_history.setdefault(tid, []).append(identity)
                     elif kind == "retry":
                         info = self._inflight.get(tid)
                         if info is not None:
                             info["started"] = None  # queued again, not running
+                            info["lease"] = None    # worker acked: lease gone
                     elif kind == "done":
                         self._inflight.pop(tid, None)
                         if value is not None:
@@ -308,7 +307,8 @@ class ProcessPoolTaskServer:
                 tnow = now()
                 next_deadline = None
                 for tid, info in self._inflight.items():
-                    if info["started"] is None or info["backup_sent"]:
+                    if (info["started"] is None or info["backup_sent"]
+                            or info["lease"] is None):
                         continue
                     hist = self._runtimes.get(info["topic"], [])
                     if len(hist) < self.straggler_min_history:
@@ -317,7 +317,7 @@ class ProcessPoolTaskServer:
                     deadline = info["started"] + self.straggler_factor * med
                     if deadline <= tnow:
                         info["backup_sent"] = True
-                        fire.append((tid, info))
+                        fire.append((tid, dict(info)))
                     elif next_deadline is None or deadline < next_deadline:
                         next_deadline = deadline
                 if not fire:
@@ -331,46 +331,51 @@ class ProcessPoolTaskServer:
                                                       0.0))
                     continue
             for tid, info in fire:
-                # decode only here (backups are rare): rebuild the task with
-                # backup placement metadata and re-dispatch
-                task: msg.Task = msg.deserialize(info["env"].data)
-                task.is_backup = True
-                task.exclude_worker = info["worker"]
-                # topology-aware placement: prefer a *different host* than
-                # the original's (a whole host can be the straggler --
-                # paper's Theta runs); round-robin over eligible peers.
-                # Fall back to this host's own channel, where the exclude
-                # bounce finds a different worker process.
-                origin = (host_of(info["worker"]) if info["worker"]
-                          else self.host)
+                # the supervisor holds no envelope bytes: the broker's
+                # lease ledger does.  Ask it to clone the leased original
+                # back onto the queue with placement exclusions merged
+                # into the clone's meta (``Channel.backup``); the
+                # original lease is untouched -- the slow worker may
+                # still win, and the claim arbitrates.
+                # Topology-aware placement: exclude the *whole origin
+                # host* when a peer pools this topic (a whole host can be
+                # the straggler -- paper's Theta runs); otherwise exclude
+                # just the original worker and let a sibling process take
+                # it.  The started events only ever come from this host's
+                # own workers, so the origin host is always self.host.
                 eligible = (self.backup_hosts.get(info["topic"], [])
                             if isinstance(self.backup_hosts, dict)
                             else self.backup_hosts)
-                peers = [h for h in eligible
-                         if h != origin and h != self.host]
+                peers = [h for h in eligible if h != self.host]
+                meta_update = {"exclude_worker": info["worker"]}
                 if peers:
+                    meta_update["exclude_host"] = self.host
                     target = peers[self._backup_rr % len(peers)]
                     self._backup_rr += 1
                 else:
                     target = self.host
-                self.backup_targets[tid] = target
-                data = msg.serialize(task)
-                self._dispatch_channel(info["topic"], host=target).put(
-                    Envelope(now(), data,
-                             {"input_size": len(data),
-                              "task_id": task.task_id}))
+                try:
+                    ok = self._request_channel(info["topic"]).backup(
+                        info["lease"], tid, meta_update)
+                except (ConnectionError, OSError, RuntimeError):
+                    continue                # broker gone / torn down
+                if ok:
+                    # the recorded target is the intended landing (with
+                    # exclude_host any non-origin host may take it; with
+                    # two hosts -- the common case -- it is exact)
+                    self.backup_targets[tid] = target
 
     # -- worker side ----------------------------------------------------------
 
-    def _start_heartbeat(self, dispatch):
+    def _start_heartbeat(self, requests):
         """Worker-side lease keepalive: one daemon thread per worker
-        process renews the dispatch lease under execution at half the
-        lease timeout, so tasks that legitimately outlive it are never
-        redelivered while their worker is demonstrably alive.  The main
-        loop publishes the lease id under ``hb_cond``; clearing it (task
-        finished) or replacing it (next task) retires the old renewal.
-        A SIGKILL stops the heartbeat with the process -- expiry-based
-        redelivery is untouched for real deaths."""
+        process renews the request-queue lease under execution at half
+        the lease timeout, so tasks that legitimately outlive it are
+        never redelivered while their worker is demonstrably alive.  The
+        main loop publishes the lease id under ``hb_cond``; clearing it
+        (task finished) or replacing it (next task) retires the old
+        renewal.  A SIGKILL stops the heartbeat with the process --
+        expiry-based redelivery is untouched for real deaths."""
         hb_cond = threading.Condition()
         current = [None]
         interval = max(self.queues.transport.lease_timeout / 2.0, 0.05)
@@ -389,7 +394,7 @@ class ProcessPoolTaskServer:
                         # are addressed (topic, kind, id), not per-socket.
                         # False = too late (already expired): the claim on
                         # the result put arbitrates, same as a straggler
-                        dispatch.renew(lid)
+                        requests.renew(lid)
                     except (ConnectionError, OSError, RuntimeError):
                         pass                # broker gone: worker exits soon
 
@@ -403,58 +408,94 @@ class ProcessPoolTaskServer:
 
         return set_current
 
+    def _worker_flush_and_exit(self):
+        vs = self.queues.value_server
+        if vs is not None and hasattr(vs, "flush_replication"):
+            # drain queued replica fan-outs (async release/put copies)
+            # before dying: an op stranded in the background queue would
+            # leave a replica holding a copy its primary already deleted
+            try:
+                vs.flush_replication(timeout=5.0)
+            except Exception:               # noqa: BLE001
+                pass
+        os._exit(0)
+
     def _worker_main(self, topic: str, rank: int):
         identity = f"{self.host}/{topic}/w{rank}/pid{os.getpid()}"
-        dispatch = self._dispatch_channel(topic)
+        requests = self._request_channel(topic)
         control = self._control_channel()
         queues = self.queues
         cache: dict = {}
-        set_hb = self._start_heartbeat(dispatch)
+        stopping = [False]
+        busy = [False]
+
+        def on_term(signum, frame):
+            stopping[0] = True
+            if not busy[0]:
+                # idle: the main loop is parked in a blocking recv that
+                # would simply *resume* when this handler returns (PEP
+                # 475), so the exit must happen here.  No socket I/O from
+                # the handler (the parked get owns this thread's
+                # connection); an unflushed piggybacked ack just lets a
+                # lease expire into a redelivery the claim dedups.
+                self._worker_flush_and_exit()
+
+        signal.signal(signal.SIGTERM, on_term)
+        set_hb = self._start_heartbeat(requests)
         while True:
-            envs = dispatch.get_batch(1)
+            envs = requests.get_batch(1)
+            if stopping[0]:
+                requests.ack(flush=True)
+                self._worker_flush_and_exit()
             if not envs:
                 continue
             env = envs[0]
-            if env.meta.get("stop"):
-                dispatch.ack(flush=True)    # don't strand the stop envelope
-                vs = queues.value_server
-                if vs is not None and hasattr(vs, "flush_replication"):
-                    # drain queued replica fan-outs (async release/put
-                    # copies) before dying: an op stranded in the
-                    # background queue would leave a replica holding a
-                    # copy its primary already deleted
-                    vs.flush_replication(timeout=5.0)
-                os._exit(0)
-            task = queues._decode_task(env)
-            if (task.exclude_worker == identity
-                    and task.bounces < _MAX_BOUNCES):
-                # backup placement: this is the worker running the original
-                task.bounces += 1
-                data = msg.serialize(task)
-                dispatch.put(Envelope(now(), data,
-                                      {"input_size": task.input_size,
-                                       "task_id": task.task_id}))
-                dispatch.ack()              # handed off: the re-put owns it
-                time.sleep(0.002 * task.bounces)
+            meta = env.meta
+            bounces = meta.get("bounces", 0)
+            if ((meta.get("exclude_worker") == identity
+                 or meta.get("exclude_host") == self.host)
+                    and bounces < _MAX_BOUNCES):
+                # backup placement: this envelope must run elsewhere (the
+                # excluded worker is by definition still busy with the
+                # original).  Bounce the bytes verbatim -- no unpickle --
+                # and back off a little so an eligible worker wins the
+                # next dequeue race.
+                busy[0] = True
+                meta = dict(meta)
+                meta["bounces"] = bounces + 1
+                requests.put(Envelope(env.t_put, env.data, meta))
+                requests.ack()              # handed off: the re-put owns it
+                busy[0] = False
+                if stopping[0]:
+                    requests.ack(flush=True)
+                    self._worker_flush_and_exit()
+                time.sleep(0.002 * (bounces + 1))
                 continue
+            busy[0] = True
+            task = queues._decode_task(env)
             control.put(Envelope(now(), pickle.dumps(
-                ("started", task.task_id, identity, task.topic, now())),
+                ("started", task.task_id, identity, task.topic,
+                 (now(), requests.held_lease(), meta.get("backup", False)))),
                 {}))
-            set_hb(dispatch.held_lease())   # heartbeat across the execution
+            set_hb(requests.held_lease())   # heartbeat across the execution
             try:
-                self._execute(task, identity, dispatch, control, cache)
+                self._execute(task, identity, requests, control, cache)
             finally:
                 set_hb(None)
             # the task reached a terminal handoff (result published, retry
             # requeued, or duplicate swallowed by the claim): release the
-            # dispatch lease.  The ack piggybacks on the next frame this
-            # worker sends; dying before it reaches the broker only causes
-            # a redelivery whose completion the claim dedups.  Until here
-            # the lease stays held, so a SIGKILL mid-execution expires it
-            # and the broker redelivers the task to another worker.
-            dispatch.ack()
+            # request-queue lease.  The ack piggybacks on the next frame
+            # this worker sends; dying before it reaches the broker only
+            # causes a redelivery whose completion the claim dedups.  Until
+            # here the lease stays held, so a SIGKILL mid-execution expires
+            # it and the broker redelivers the task to another worker.
+            requests.ack()
+            busy[0] = False
+            if stopping[0]:
+                requests.ack(flush=True)
+                self._worker_flush_and_exit()
 
-    def _execute(self, task: msg.Task, identity: str, dispatch, control,
+    def _execute(self, task: msg.Task, identity: str, requests, control,
                  cache: dict):
         queues = self.queues
         spec = self._methods[task.method]
@@ -480,12 +521,13 @@ class ProcessPoolTaskServer:
             if task.retries < spec.max_retries:
                 task.retries += 1
                 data = msg.serialize(task)
-                dispatch.put(Envelope(now(), data,
+                requests.put(Envelope(now(), data,
                                       {"input_size": task.input_size,
                                        "task_id": task.task_id}))
-                # tell the parent the attempt ended: clearing 'started'
-                # stops the straggler monitor from firing a backup for a
-                # task that is queued for retry, not running anywhere
+                # tell the supervisor the attempt ended: clearing
+                # 'started' stops the straggler monitor from firing a
+                # backup for a task that is queued for retry, not
+                # running anywhere
                 control.put(Envelope(now(), pickle.dumps(
                     ("retry", task.task_id, identity, task.topic, None)),
                     {}))

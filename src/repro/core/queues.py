@@ -185,15 +185,32 @@ class ColmenaQueues:
         # before the (later) VS snapshot.  The reverse order could image
         # a result envelope whose payload missed the VS cut: a dangling
         # proxy on a *claimed* task id, which is an unrecoverable lost
-        # task.  (The residual window -- a worker publishing and then
-        # releasing its one-shot inputs between the two cuts -- at worst
-        # makes the redelivered re-execution error out visibly, never
-        # silently lose work.)
+        # task.
+        #
+        # The residual window -- a worker completing between the two
+        # cuts, whose one-shot input release beats the VS snapshot while
+        # the transport cut still images its request as in-flight -- is
+        # closed by verification: every completion fuses a claim into
+        # the result put *before* the release, so if a transport re-cut
+        # taken after the VS snapshot shows the same claim window, no
+        # release can have raced the VS cut and the pair is consistent.
+        # On mismatch both cuts are retaken (the completed task's claim
+        # and result envelope are then inside the transport cut, and its
+        # released inputs are no longer needed).  If the fabric outruns
+        # every retry, the stale pair still errors a redelivered
+        # re-execution out visibly -- never silently losing work.
         transport_snap = self.transport.snapshot()
         vs = None
         if self.value_server is not None \
                 and hasattr(self.value_server, "snapshot"):
-            vs = self.value_server.snapshot()
+            baseline = self._claim_ids(transport_snap)
+            for _ in range(5):
+                vs = self.value_server.snapshot()
+                recut = self.transport.snapshot()
+                ids = self._claim_ids(recut)
+                if ids == baseline:
+                    break
+                transport_snap, baseline = recut, ids
         payload = {"version": 1,
                    "transport": transport_snap,
                    "active": self.active_count,
@@ -206,6 +223,24 @@ class ColmenaQueues:
             pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
         os.replace(tmp, path)
         return path
+
+    @staticmethod
+    def _claim_ids(snap: bytes) -> set:
+        """The union of claim-window ids inside a transport snapshot --
+        single broker or federation bundle.  Every task completion fuses
+        a claim into its result put, so two cuts with equal claim sets
+        bracket an interval in which no task completed (the
+        ``checkpoint`` consistency check)."""
+        from repro.core.transport.base import load_snapshot
+        payload = pickle.loads(snap)
+        if isinstance(payload, dict) and "fed_snapshot" in payload:
+            states = [load_snapshot(b) for b in payload["hosts"].values()]
+        else:
+            states = [load_snapshot(snap)]
+        ids: set = set()
+        for state in states:
+            ids.update(state["claims"]["order"])
+        return ids
 
     @staticmethod
     def load_checkpoint(path: str) -> dict:
@@ -415,8 +450,9 @@ class ColmenaQueues:
         for name, seconds in env.meta.items():
             if name == "input_size":
                 task.input_size = seconds
-            elif name in ("task_id", "redelivered"):
-                pass                        # bookkeeping, not a timer
+            elif name in ("task_id", "redelivered", "backup", "bounces",
+                          "exclude_worker", "exclude_host"):
+                pass                        # bookkeeping/placement, not a timer
             else:
                 task.timer.record(name, seconds)
         task.timer.record("request_queue_transit", now() - env.t_put)

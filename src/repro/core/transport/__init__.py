@@ -51,6 +51,41 @@ racing a slow-but-alive original yields exactly one published result.
 cut -- the substrate of ``ColmenaQueues.checkpoint``/``resume`` and
 campaign-level restart without resubmission.
 
+Control plane vs data plane
+---------------------------
+The fabric splits who *supervises* work from who *moves* its bytes.
+
+**Data plane** -- envelope bytes take the shortest path that exists:
+
+- **Direct subscription**: every consumer (pool worker, inference
+  shard, Thinker) discovers its topic's home broker through the
+  ``endpoints`` op (peer map + partition, advertised by every broker of
+  a federation) and dials it directly, holding and renewing its *own*
+  lease.  In a cluster this removes the per-frame relay hop the
+  federation layer used to take for remotely-homed topics -- the relay
+  remains only as a correctness fallback for clients that haven't
+  discovered yet.
+- **Shared-memory lane** (``transport.shm``): between co-located
+  processes, a payload >= ``SHM_THRESHOLD`` rides a ``/dev/shm``
+  segment; the frame header carries a flat ``{"name", "size"}``
+  descriptor and the socket carries no body.  Segment ownership is tied
+  to the lease lifecycle (producer until handoff, broker until
+  ack/claim-reject, consumers only map and read), so a SIGKILLed
+  consumer can neither leak a segment past the broker's registry nor
+  double-free it; fabric teardown sweeps the scope.
+- **Typed array codec** (``transport.ndcodec``): Value Server payloads
+  that are numpy/jax arrays serialize as a self-describing typed header
+  plus the raw buffer -- ``pickle`` never touches the array body, and
+  decode returns a zero-copy view (re-wrapped on device for jax).
+
+**Control plane** -- supervision stays where the global view is: the
+pool parent watches worker liveness and straggler timers (scheduling
+backup clones broker-side via the ``backup`` op, with placement
+exclusions in envelope meta), the federation coordinator owns
+partition/topology, and the launcher owns process lifecycle + the shm
+scope sweep.  Control messages are small and infrequent; they never
+carry payload bytes.
+
 The same frame protocol serves the sharded Value Server
 (``transport.shards``): each ``ValueServerShard`` is a process exposing
 put/get/ref ops over its own socket, and clients route keys to shards by

@@ -258,6 +258,21 @@ class Channel:
         outlive it never trigger a wasteful redelivery."""
         raise NotImplementedError
 
+    def backup(self, lease_id: int, task_id: str,
+               meta_update: dict) -> bool:
+        """Clone one envelope of a live lease back onto the queue, with
+        ``meta_update`` (placement hints like ``exclude_host``) merged
+        into the copy's meta and ``backup=True`` set.  This is the
+        straggler-mitigation primitive for the direct-subscription data
+        plane: the supervisor never holds envelope bytes, but the lease
+        ledger does -- so a backup is scheduled *where the original
+        lives*, addressed by (lease_id, task_id).  The original lease is
+        untouched (the slow consumer may still win); first completion
+        arbitrates through the publish-fused claim as always.  Returns
+        False when the lease is gone (acked or expired -- a backup is
+        moot either way)."""
+        raise NotImplementedError
+
     def wake(self) -> None:
         """Nudge every blocked consumer (shutdown/cancel propagation)."""
         raise NotImplementedError

@@ -42,11 +42,12 @@ returns the address is connectable.
 """
 from __future__ import annotations
 
+import socket as socketlib
 import threading
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.transport import frames
+from repro.core.transport import frames, shm
 from repro.core.transport.base import (BoundedIdSet, dump_snapshot,
                                        load_snapshot)
 from repro.utils.timing import now
@@ -66,11 +67,16 @@ class _BrokerQueue:
 
 
 class Broker:
-    def __init__(self, claim_window: int = 1 << 16):
+    def __init__(self, claim_window: int = 1 << 16,
+                 shm_scope: Optional[str] = None):
         self._queues: Dict[Tuple[str, str], _BrokerQueue] = {}
         self._qlock = threading.Lock()
         self._claimed = BoundedIdSet(claim_window)
         self._claim_lock = threading.Lock()
+        # the fabric's shared-memory scope token: advertised to clients
+        # via the ``endpoints`` op so producers name their segments under
+        # it (and teardown can sweep exactly this fabric's leftovers)
+        self.shm_scope = shm_scope
 
     def _queue(self, topic: str, kind: str) -> _BrokerQueue:
         with self._qlock:
@@ -107,7 +113,16 @@ class Broker:
     # -- ops ----------------------------------------------------------------
 
     def put(self, topic: str, kind: str, t_put: float, meta: dict,
-            data: bytes, claim: Optional[str] = None) -> bool:
+            data: bytes, claim: Optional[str] = None,
+            shm_desc: Optional[dict] = None) -> bool:
+        if shm_desc is not None:
+            # the payload rides shared memory: ownership of the segment
+            # transferred to this broker with the frame.  It is carried
+            # in the envelope meta (so lease expiry redelivers it) and
+            # unlinked when the envelope is destroyed (ack / rejected
+            # claim / restore / shutdown).
+            meta = dict(meta)
+            meta["_shm"] = shm_desc
         q = self._queue(topic, kind)
         if claim is not None:
             # the claim lock is held ACROSS the enqueue (lock order:
@@ -116,6 +131,8 @@ class Broker:
             # would dedup the redelivered re-execution and lose the task
             with self._claim_lock:
                 if not self._claimed.claim(claim):
+                    if shm_desc is not None:
+                        shm.unlink_segment(shm_desc)
                     return False            # duplicate publisher: swallowed
                 with q.cond:
                     q.items.append((t_put, meta, data))
@@ -190,7 +207,48 @@ class Broker:
     def ack(self, topic: str, kind: str, lease_id: int) -> None:
         q = self._queue(topic, kind)
         with q.cond:
-            q.leases.pop(lease_id, None)    # already expired: no-op
+            lease = q.leases.pop(lease_id, None)    # already expired: no-op
+        if lease is not None:
+            # acked envelopes are destroyed: release their segments (the
+            # unlink happens outside the queue lock; the items are no
+            # longer reachable from any queue structure)
+            for _, meta, _ in lease[2]:
+                if "_shm" in meta:
+                    shm.unlink_segment(meta["_shm"])
+
+    def backup(self, topic: str, kind: str, lease_id: int, task_id: str,
+               meta_update: dict) -> bool:
+        """Straggler support for the direct-subscription data plane: the
+        pool parent never sees envelope bytes any more, but the broker
+        holds the leased original right here -- so a backup is a
+        broker-side *clone* of the leased envelope back onto the queue,
+        with placement metadata (``exclude_host``/``exclude_worker``)
+        merged into the copy's meta.  The original lease is untouched
+        (the slow worker may still win); first completion arbitrates
+        through the claim as always.  False = the lease is gone (acked
+        or expired -- either way a backup is moot)."""
+        q = self._queue(topic, kind)
+        with q.cond:
+            lease = q.leases.get(lease_id)
+            if lease is None:
+                return False
+            for t_put, meta, data in lease[2]:
+                if meta.get("task_id") == task_id:
+                    m = dict(meta)
+                    m.update(meta_update)
+                    m["backup"] = True
+                    if "_shm" in m:
+                        # the clone cannot share the original's segment
+                        # (each envelope's destruction unlinks its own):
+                        # inline the payload into the copy instead
+                        try:
+                            data = shm.read_segment(m.pop("_shm"))
+                        except OSError:
+                            return False
+                    q.items.append((t_put, m, data))
+                    q.cond.notify()
+                    return True
+        return False
 
     def renew(self, topic: str, kind: str, lease_id: int) -> bool:
         """Push a live lease's deadline out by another full duration.
@@ -226,6 +284,37 @@ class Broker:
             self._expire_locked(q)
             return len(q.items)
 
+    # -- shared-memory plumbing ----------------------------------------------
+
+    @staticmethod
+    def _inline_shm(item: tuple) -> tuple:
+        """Snapshot form of a queue item: segment payloads are read back
+        inline and the descriptor dropped, so a snapshot is self-contained
+        (restorable into a fresh incarnation whose segments are gone) and
+        byte-identical across resnaps of identical state (segment names
+        are incarnation-local and must not leak into the image)."""
+        t_put, meta, data = item
+        if "_shm" not in meta:
+            return item
+        meta = dict(meta)
+        data = shm.read_segment(meta.pop("_shm"))
+        return (t_put, meta, data)
+
+    def release_segments(self) -> None:
+        """Unlink every segment still referenced by a queue or lease --
+        the graceful-shutdown path (a SIGKILLed broker's leftovers are
+        reclaimed by the owner transport's scope sweep instead)."""
+        with self._qlock:
+            queues = list(self._queues.values())
+        for q in queues:
+            with q.cond:
+                items = list(q.items)
+                for _, _, lease_items in q.leases.values():
+                    items.extend(lease_items)
+            for _, meta, _ in items:
+                if "_shm" in meta:
+                    shm.unlink_segment(meta["_shm"])
+
     # -- snapshot/restore -----------------------------------------------------
 
     def snapshot(self) -> bytes:
@@ -246,8 +335,9 @@ class Broker:
                 stack.enter_context(q.cond)
             out = []
             for (topic, kind), q in queues:
-                items = list(q.items)
-                leases = sorted((lid, dur, list(lease_items))
+                items = [self._inline_shm(it) for it in q.items]
+                leases = sorted((lid, dur,
+                                 [self._inline_shm(it) for it in lease_items])
                                 for lid, (dur, _, lease_items)
                                 in q.leases.items())
                 out.append((topic, kind, q.epoch, items, leases))
@@ -257,6 +347,9 @@ class Broker:
 
     def restore(self, data: bytes, expire_leases: bool = False) -> None:
         state = load_snapshot(data)
+        # the restored image replaces the current queues wholesale: any
+        # segment the discarded envelopes referenced is released first
+        self.release_segments()
         tnow = now()
         for topic, kind, epoch, items, leases in state["queues"]:
             q = self._queue(topic, kind)
@@ -291,19 +384,45 @@ class Broker:
         op = header["op"]
         if op == "put":
             ok = self.put(header["topic"], header["kind"], header["t_put"],
-                          header["meta"], payload, header.get("claim"))
+                          header["meta"], payload, header.get("claim"),
+                          header.get("shm"))
             return {"ok": True, "claimed": ok}, b""
         if op == "get":
             items, woken, epoch, lease = self.get(
                 header["topic"], header["kind"], header["max_n"],
                 header["timeout"], header.get("epoch"),
                 header.get("lease_timeout", 30.0))
+            shm_ok = header.get("shm_ok", False)
             lens, blobs = [], []
             for t_put, meta, data in items:
+                if "_shm" in meta and shm_ok:
+                    # hand the descriptor through: the co-located consumer
+                    # maps the segment itself and the payload never touches
+                    # this socket.  The lease keeps the descriptor, so the
+                    # eventual ack (or a post-expiry redelivery) still
+                    # resolves the segment's lifetime here.
+                    lens.append((t_put, meta, 0))
+                    continue
+                if "_shm" in meta:
+                    # remote (or lane-disabled) consumer: inline the bytes;
+                    # the leased original keeps the descriptor for cleanup
+                    meta = dict(meta)
+                    data = shm.read_segment(meta.pop("_shm"))
                 lens.append((t_put, meta, len(data)))
                 blobs.append(data)
             return {"envs": lens, "woken": woken, "epoch": epoch,
                     "lease": lease}, b"".join(blobs)
+        if op == "backup":
+            ok = self.backup(header["topic"], header["kind"], header["lease"],
+                             header["id"], header["meta"])
+            return {"ok": ok}, b""
+        if op == "endpoints":
+            # data-plane discovery: a plain broker IS every topic's home
+            # (no peers to advertise); the federation overrides this with
+            # its peer address map so clients dial home brokers directly
+            return {"host": None, "peers": {}, "partition": {},
+                    "machine": socketlib.gethostname(),
+                    "scope": self.shm_scope}, b""
         if op == "ack":                     # explicit flush (rare path)
             return {"ok": True}, b""
         if op == "renew":
@@ -357,12 +476,14 @@ def start_autosnapshot(snapshot_fn, every: float, path: str,
 
 
 def broker_main(sock, snapshot_every: float = 0.0,
-                snapshot_path: Optional[str] = None) -> None:
+                snapshot_path: Optional[str] = None,
+                shm_scope: Optional[str] = None) -> None:
     """Entry point of the broker process (listening socket inherited from
     the parent fork)."""
-    broker = Broker()
+    broker = Broker(shm_scope=shm_scope)
     stop = threading.Event()
     if snapshot_every and snapshot_path:
         start_autosnapshot(broker.snapshot, snapshot_every, snapshot_path,
                            stop)
     frames.serve_forever(sock, broker.handle, stop)
+    broker.release_segments()

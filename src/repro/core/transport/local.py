@@ -149,6 +149,22 @@ class LocalChannel(Channel):
         with self._cond:
             self._leases.pop(lease_id, None)  # already expired: no-op
 
+    def backup(self, lease_id: int, task_id: str,
+               meta_update: dict) -> bool:
+        with self._cond:
+            lease = self._leases.get(lease_id)
+            if lease is None:
+                return False                  # acked or already expired
+            for env in lease[2]:
+                if env.meta.get("task_id") == task_id:
+                    meta = dict(env.meta)
+                    meta.update(meta_update)
+                    meta["backup"] = True
+                    self._items.append(Envelope(env.t_put, env.data, meta))
+                    self._cond.notify()
+                    return True
+        return False
+
     def renew(self, lease_id: Optional[int] = None) -> bool:
         lid = lease_id if lease_id is not None else self.held_lease()
         if lid is None:

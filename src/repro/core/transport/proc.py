@@ -8,30 +8,56 @@ Condition -- there is no polling on either side of the wire.  The
 transport object is safe to capture in forked workers: its ``FrameClient``
 reopens connections per (pid, thread).
 
+Two data-plane optimizations live here, both discovered (not configured)
+through the broker's ``endpoints`` op:
+
+- **Direct routing.**  In a federation, each topic is homed at exactly
+  one member broker.  Rather than sending every frame to the local
+  broker and letting it relay, a channel resolves its topic's home from
+  the advertised peer map and dials that broker directly -- zero relay
+  hops on the data plane.  The relay path remains as the fallback (a
+  frame that does land at a non-home member is still forwarded), and
+  control traffic (``wake``, ``claim``, snapshots, ack flushes) keeps
+  going through the connected broker, which owns the broadcast /
+  coordinator semantics.
+- **Shared-memory payload lane.**  When the destination broker is
+  co-located (same machine, advertises a shm scope), a payload at or
+  above ``shm_threshold`` is written once into a shared-memory segment
+  (``transport.shm``) and only its descriptor rides the frame header;
+  co-located consumers advertise ``shm_ok`` on their gets and map the
+  segment themselves.  Segment lifetime is tied to the envelope's
+  lease/ack lifecycle at the broker (see ``shm.py``'s ownership
+  protocol); the wire format is unchanged for remote or under-threshold
+  frames.
+
 Delivery is leased (see ``base.Channel``): every non-empty ``get``
 response carries a lease id, and the envelopes are only destroyed when
 the consumer acks it.  Acks accumulate in a transport-level pending set
-and piggyback on the *next* outgoing frame -- any frame, to any channel
-of the same broker -- so committing a batch costs zero extra round
-trips.  If a frame carrying acks dies with its connection, the acks are
-restored to the pending set: the worst case is a redundant redelivery
-that the publisher-side ``claim`` dedups, never a lost task.
+and piggyback on the *next* outgoing frame -- any frame, to any broker
+of the fabric; a member receiving acks for topics homed elsewhere
+forwards them (``federation._route_acks``).  If a frame carrying acks
+dies with its connection, the acks are restored to the pending set: the
+worst case is a redundant redelivery that the publisher-side ``claim``
+dedups, never a lost task.
 """
 from __future__ import annotations
 
 import atexit
 import multiprocessing
 import os
+import socket as socketlib
 import tempfile
 import threading
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
-from repro.core.transport import frames
+from repro.core.transport import frames, shm
 from repro.core.transport.base import Channel, Envelope, Transport
 from repro.core.transport.broker import broker_main
 from repro.utils.timing import now
 
 _mp = multiprocessing.get_context("fork")
+
+_LOCAL_HOSTS = ("localhost", "127.0.0.1", "::1")
 
 
 class ProcChannel(Channel):
@@ -39,6 +65,11 @@ class ProcChannel(Channel):
         self._t = transport
         self.topic = topic
         self.kind = kind
+        # the topic's home-broker client and whether that broker is
+        # co-located (shm lane eligible); resolved lazily on first use --
+        # both threads of a benign race compute the same cached client
+        self._client: Optional[frames.FrameClient] = None
+        self._local = False
         # wake epoch and held lease observed from the broker, tracked PER
         # THREAD (like FrameClient's sockets): the broker only parks a get
         # whose epoch is current, so a wake_all landing between a thread's
@@ -47,18 +78,39 @@ class ProcChannel(Channel):
         # clobber a sibling consumer's epoch or lease
         self._tls = threading.local()
 
+    def _dc(self) -> frames.FrameClient:
+        """This topic's home-broker client (direct data plane)."""
+        c = self._client
+        if c is None:
+            c, local = self._t.client_for(self.topic)
+            self._local = local
+            self._client = c
+        return self._client
+
     def put(self, env: Envelope, claim: Optional[str] = None) -> bool:
+        client = self._dc()
         header = {"op": "put", "topic": self.topic, "kind": self.kind,
                   "t_put": env.t_put, "meta": env.meta}
         if claim is not None:
             header["claim"] = claim
-        resp, _ = self._t.request(header, env.data)
+        payload = env.data
+        desc = self._t.export_payload(payload) if self._local else None
+        if desc is not None:
+            header["shm"] = desc
+            payload = b""
+        # NOTE on a failed request after export: the segment is NOT
+        # unlinked here.  A connection error is ambiguous -- the broker
+        # may have received the frame and now owns the segment; unlinking
+        # would destroy a delivered envelope's payload.  The leak is
+        # bounded: teardown sweeps the fabric's scope (shm.sweep_scope).
+        resp, _ = self._t.request(header, payload, client=client)
         return resp.get("claimed", True)
 
     def get_batch(self, max_n: int, timeout: Optional[float] = None,
                   cancel: Optional[threading.Event] = None
                   ) -> List[Envelope]:
         self.ack()                          # poll-is-commit backstop
+        client = self._dc()
         deadline = None if timeout is None else now() + timeout
         while True:
             if cancel is not None and cancel.is_set():
@@ -80,15 +132,33 @@ class ProcChannel(Channel):
                 {"op": "get", "topic": self.topic, "kind": self.kind,
                  "max_n": max_n, "timeout": remaining,
                  "lease_timeout": self._t.lease_timeout,
-                 "epoch": epoch})
+                 "epoch": epoch, "shm_ok": self._local},
+                client=client)
             self._tls.epoch = header["epoch"]
             if header["envs"]:
                 self._tls.held = header["lease"]
                 out, off = [], 0
                 for t_put, meta, n in header["envs"]:
+                    if "_shm" in meta:
+                        # out-of-band payload: map the co-located segment
+                        # (read-only -- consumers never unlink, see shm.py)
+                        meta = dict(meta)
+                        desc = meta.pop("_shm")
+                        try:
+                            data = shm.read_segment(desc)
+                        except OSError:
+                            # our lease expired mid-flight and the
+                            # redelivered copy's consumer already acked
+                            # (destroying the segment): this copy lost the
+                            # race anyway -- drop it, the claim dedups
+                            continue
+                        out.append(Envelope(t_put, data, meta))
+                        continue
                     out.append(Envelope(t_put, blob[off:off + n], meta))
                     off += n
-                return out
+                if out:
+                    return out
+                continue                    # every item raced: re-get
             if not header["woken"]:
                 return []                   # server-side timeout lapsed
             # woken (wake_all) or first-request epoch sync: re-check
@@ -129,7 +199,20 @@ class ProcChannel(Channel):
             return False
         header, _ = self._t.request(
             {"op": "renew", "topic": self.topic, "kind": self.kind,
-             "lease": lid})
+             "lease": lid}, client=self._dc())
+        return header["ok"]
+
+    def backup(self, lease_id: int, task_id: str,
+               meta_update: dict) -> bool:
+        """Ask the broker to clone a leased envelope back onto the queue
+        (straggler backup; see ``Broker.backup``).  Deliberately not
+        retried: a resend of a backup that was applied before its
+        connection died would enqueue a second clone -- harmless (claim
+        dedup) but wasteful, and the straggler timer re-fires anyway."""
+        header, _ = self._t.request(
+            {"op": "backup", "topic": self.topic, "kind": self.kind,
+             "lease": lease_id, "id": task_id, "meta": meta_update},
+            client=self._dc())
         return header["ok"]
 
     def wake(self) -> None:
@@ -138,7 +221,7 @@ class ProcChannel(Channel):
     def __len__(self) -> int:
         header, _ = self._t.request(
             {"op": "len", "topic": self.topic, "kind": self.kind},
-            retry=True)
+            retry=True, client=self._dc())
         return header["n"]
 
 
@@ -148,7 +231,8 @@ class ProcTransport(Transport):
     def __init__(self, address: Optional[tuple] = None,
                  lease_timeout: float = 30.0,
                  snapshot_every: float = 0.0,
-                 snapshot_path: Optional[str] = None):
+                 snapshot_path: Optional[str] = None,
+                 shm_threshold: Optional[int] = None):
         """address: connect to an existing broker (another process's
         fabric, or a cluster launcher's per-host federated broker); None
         forks a fresh broker owned by this transport.
@@ -159,20 +243,34 @@ class ProcTransport(Transport):
         snapshot_every/snapshot_path: broker-side periodic auto-snapshot
         (atomic tmp+rename) -- crash protection with no application
         checkpoint call; only valid when this transport forks the
-        broker (a remote broker configures its own)."""
+        broker (a remote broker configures its own).
+        shm_threshold: payload size at which co-located frames switch to
+        the shared-memory lane (default ``shm.SHM_THRESHOLD``)."""
         self._proc = None
         self._dir = None
         self._owner_pid = os.getpid()
         self.lease_timeout = lease_timeout
+        self.shm_threshold = (shm.SHM_THRESHOLD if shm_threshold is None
+                              else shm_threshold)
         self._pending_acks: list = []
         self._ack_lock = threading.Lock()
+        # endpoints discovery + direct-client cache (lazy, lock-guarded)
+        self._endpoints: Optional[dict] = None
+        self._ep_lock = threading.Lock()
+        self._direct_clients: dict = {}
+        self._dc_lock = threading.Lock()
+        self._shm_scope: Optional[str] = None   # active producer scope
+        self._owned_scope: Optional[str] = None  # swept at close()
         if address is None:
             self._dir = tempfile.mkdtemp(prefix="colmena-broker-")
             sock, address = frames.make_server_socket(
                 os.path.join(self._dir, "broker.sock"))
+            if shm.shm_dir() is not None:
+                self._owned_scope = shm.new_scope()
             self._proc = _mp.Process(
                 target=broker_main,
-                args=(sock, snapshot_every, snapshot_path),
+                args=(sock, snapshot_every, snapshot_path,
+                      self._owned_scope),
                 daemon=True, name="colmena-broker")
             self._proc.start()
             sock.close()                    # the broker child owns it now
@@ -185,26 +283,143 @@ class ProcTransport(Transport):
         self.address = address
         self.client = frames.FrameClient(address)
 
+    # -- fork safety ----------------------------------------------------------
+
+    def _after_fork(self) -> None:
+        """A forked child inherits this transport's locks in whatever
+        state the parent's threads held them at fork time -- a parent
+        thread inside ``endpoints()`` leaves ``_ep_lock`` locked in the
+        child *forever* (the owner lives in another process).  First use
+        under a new pid therefore resets every transport-level mutable:
+        fresh locks, empty direct-client cache (``FrameClient`` re-dials
+        per pid anyway), no inherited pending acks (those are the
+        parent's to flush), and cleared discovery/ownership state so the
+        child re-discovers and can never tear down the parent's broker
+        or sweep its shm scope.  Called from every entry point that
+        touches a lock, ahead of acquiring it."""
+        if os.getpid() == self._owner_pid:
+            return
+        self._owner_pid = os.getpid()
+        self._ack_lock = threading.Lock()
+        self._pending_acks = []
+        self._ep_lock = threading.Lock()
+        self._endpoints = None
+        self._dc_lock = threading.Lock()
+        self._direct_clients = {}
+        self._shm_scope = None
+        self._proc = None
+        self._dir = None
+        self._owned_scope = None
+
+    # -- data-plane discovery -------------------------------------------------
+
+    def endpoints(self) -> dict:
+        """The connected broker's advertised topology: its federation
+        host name (None for a plain broker), peer address map, topic
+        partition, machine, and shm scope.  Discovered once, lazily,
+        under a lock (double-checked: the fast path is one dict read);
+        a broker predating the op degrades to the relay path."""
+        self._after_fork()
+        ep = self._endpoints
+        if ep is not None:
+            return ep
+        with self._ep_lock:
+            if self._endpoints is None:
+                try:
+                    header, _ = self.request({"op": "endpoints"},
+                                             retry=True)
+                except (ConnectionError, OSError, RuntimeError):
+                    # unreachable or pre-endpoints broker: no direct
+                    # routing, no shm lane -- every frame relays as before
+                    header = {"host": None, "peers": {}, "partition": {},
+                              "machine": None, "scope": None}
+                if (header.get("scope")
+                        and header.get("machine") == socketlib.gethostname()
+                        and shm.shm_dir() is not None):
+                    self._shm_scope = header["scope"]
+                self._endpoints = header
+        return self._endpoints
+
+    @staticmethod
+    def _addr_is_local(address) -> bool:
+        """Whether a broker address is on this machine: a Unix-domain
+        socket (a bare path, or ``("unix", path)`` as
+        ``make_server_socket`` returns) always is; TCP only via loopback
+        or our own hostname (the launcher's ssh path rewrites remote
+        members to real hosts)."""
+        if isinstance(address, (str, bytes)):
+            return True
+        host = address[0]
+        return (host == "unix" or host in _LOCAL_HOSTS
+                or host == socketlib.gethostname())
+
+    def client_for(self, topic: str) -> Tuple[frames.FrameClient, bool]:
+        """(client, co_located) for ``topic``'s home broker.  For a plain
+        broker (or before/without discovery) that is the connected
+        client; in a federation the topic's home is resolved from the
+        advertised partition and dialed directly -- the same
+        ``resolve_home`` every member routes by, so a direct frame is
+        always local at its target."""
+        ep = self.endpoints()
+        host = ep.get("host")
+        shm_on = self._shm_scope is not None
+        if not host:
+            return self.client, shm_on and self._addr_is_local(self.address)
+        # deferred import: cluster.spec pulls in the cluster package,
+        # which imports this module at load time
+        from repro.core.cluster.spec import resolve_home
+        home = resolve_home(topic, ep["partition"], sorted(ep["peers"]))
+        if home == host:
+            return self.client, shm_on and self._addr_is_local(self.address)
+        addr = ep["peers"][home]
+        with self._dc_lock:
+            c = self._direct_clients.get(home)
+            if c is None:
+                c = self._direct_clients[home] = frames.FrameClient(addr)
+        return c, shm_on and self._addr_is_local(addr)
+
+    def export_payload(self, data: bytes) -> Optional[dict]:
+        """Move ``data`` into a shared-memory segment if the lane is on
+        and the payload is big enough; returns the descriptor to ride
+        the frame header, or None to send inline.  Any shm failure
+        (namespace full, swept scope) silently falls back to inline --
+        the lane is an optimization, never a correctness dependency."""
+        scope = self._shm_scope
+        if scope is None or len(data) < self.shm_threshold:
+            return None
+        try:
+            return shm.create_segment(scope, data)
+        except OSError:
+            return None
+
     # -- ack piggybacking ---------------------------------------------------
 
     def queue_ack(self, ack: tuple) -> None:
+        self._after_fork()
         with self._ack_lock:
             self._pending_acks.append(ack)
 
     def flush_acks(self) -> None:
         """Force pending acks onto the wire now (normally they ride the
         next frame; use before exiting a consumer)."""
+        self._after_fork()
         with self._ack_lock:
             if not self._pending_acks:
                 return
         self.request({"op": "ack"})
 
     def request(self, header: dict, payload: bytes = b"",
-                retry: bool = False):
+                retry: bool = False, client=None):
         """All broker traffic funnels through here so any frame can carry
-        the pending acks.  On a failed send the acks are restored: they
-        ride the next successful frame, and until then the leases just
-        stay in-flight (expiry + claim dedup make that safe)."""
+        the pending acks -- to any broker of the fabric: a federation
+        member routes acks for topics homed elsewhere (so an ack queued
+        against one home broker safely rides a frame to another).  On a
+        failed send the acks are restored: they ride the next successful
+        frame, and until then the leases just stay in-flight (expiry +
+        claim dedup make that safe)."""
+        self._after_fork()
+        if client is None:
+            client = self.client
         acks = None
         with self._ack_lock:
             if self._pending_acks:
@@ -214,7 +429,7 @@ class ProcTransport(Transport):
             header = dict(header)
             header["acks"] = acks
         try:
-            return self.client.request(header, payload, retry=retry)
+            return client.request(header, payload, retry=retry)
         except (ConnectionError, OSError):
             if acks:
                 with self._ack_lock:
@@ -257,9 +472,16 @@ class ProcTransport(Transport):
         except (ConnectionError, OSError):
             pass
         self.client.close()
+        for c in self._direct_clients.values():
+            c.close()
         proc.join(timeout=2)
         if proc.is_alive():
             proc.terminate()
+        if self._owned_scope is not None:
+            # the broker released live segments on graceful shutdown;
+            # this sweep reclaims leaks no registry could see (producer
+            # died pre-handoff, broker SIGKILLed)
+            shm.sweep_scope(self._owned_scope)
         if self._dir is not None:
             import shutil
             shutil.rmtree(self._dir, ignore_errors=True)

@@ -62,7 +62,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Tuple
 import uuid
 
-from repro.core.transport import frames
+from repro.core.transport import frames, ndcodec
 
 _mp = multiprocessing.get_context("fork")
 
@@ -73,6 +73,11 @@ VS_SNAPSHOT_VERSION = 1
 ROUTED_OPS = frozenset({"vs_put", "vs_get", "vs_add_ref", "vs_release",
                         "vs_delete", "vs_size_of", "vs_contains",
                         "vs_export"})
+
+#: how long a shard holds a ``vs_get`` reply for a key a migration
+#: announced but has not delivered (vs_expect without vs_end_expect --
+#: the migration manager died); bounds the worst-case client stall
+EXPECT_WAIT = 30.0
 
 
 class HashRing:
@@ -135,6 +140,19 @@ def _shard_main(sock, capacity_bytes: Optional[int], spill_dir: Optional[str],
     # "replicas"}), pushed by whoever drives membership (owner client or
     # cluster launcher).  None = pre-ring deployment: no staleness checks.
     state = {"ring": None}
+    # keys a migration has announced as incoming (``vs_expect``): a get
+    # for one of them holds its reply until the copy lands or the
+    # migration window closes, instead of answering a transient miss
+    # that a replicas=1 deployment has no fallback for.  serve_forever
+    # is thread-per-connection, so a held reply blocks only its caller.
+    expect = {"keys": set(), "epoch": -1}
+    expect_cond = threading.Condition()
+
+    def _landed(key) -> None:
+        with expect_cond:
+            if key in expect["keys"]:
+                expect["keys"].discard(key)
+                expect_cond.notify_all()
 
     def handle(header: dict, payload: bytes):
         op = header["op"]
@@ -150,12 +168,22 @@ def _shard_main(sock, capacity_bytes: Optional[int], spill_dir: Optional[str],
             # stored as the client's pickle bytes: never re-pickled here
             key = vs.put(payload, size=header["size"], refs=header["refs"],
                          key=header["key"])
+            _landed(key)
             return {"key": key}, b""
         if op == "vs_get":
-            try:
-                return {"ok": True}, vs.get(header["key"])
-            except KeyError:
-                return {"ok": False}, b""
+            key = header["key"]
+            while True:
+                try:
+                    return {"ok": True}, vs.get(key)
+                except KeyError:
+                    with expect_cond:
+                        if key not in expect["keys"]:
+                            return {"ok": False}, b""
+                        if not expect_cond.wait(timeout=EXPECT_WAIT):
+                            # window never closed (migration manager
+                            # died pre-end_expect): stop holding gets
+                            expect["keys"].discard(key)
+                            return {"ok": False}, b""
         if op == "vs_add_ref":
             vs.add_ref(header["key"])
             return {"ok": True}, b""
@@ -191,6 +219,25 @@ def _shard_main(sock, capacity_bytes: Optional[int], spill_dir: Optional[str],
             return {"ok": True, "size": size, "refs": refs}, b""
         if op == "vs_adopt_spill":
             vs.adopt_spilled(header["key"], header["size"], header["refs"])
+            _landed(header["key"])
+            return {"ok": True}, b""
+        if op == "vs_expect":
+            # migration preamble, sent BEFORE the ring push: these keys
+            # are on their way here.  Epoch-guarded set union, so a
+            # replayed announcement (or one racing a newer migration)
+            # converges instead of resurrecting a closed window.
+            with expect_cond:
+                if header["epoch"] >= expect["epoch"]:
+                    expect["epoch"] = header["epoch"]
+                    expect["keys"].update(header["keys"])
+            return {"ok": True}, b""
+        if op == "vs_end_expect":
+            # migration postamble (finally-block): whatever did not land
+            # is not coming -- release every held get to answer its miss
+            with expect_cond:
+                if header["epoch"] >= expect["epoch"]:
+                    expect["keys"].clear()
+                expect_cond.notify_all()
             return {"ok": True}, b""
         if op == "vs_ring":
             return {"ring": state["ring"]}, b""
@@ -238,10 +285,12 @@ class ShardedValueServer:
                  spill: bool = False,
                  fetch_bandwidth: Optional[float] = None,
                  vnodes: int = 64,
-                 replicas: int = 1):
+                 replicas: int = 1,
+                 array_codec: bool = True):
         assert num_shards >= 1
         assert 1 <= replicas
         self.replicas = replicas
+        self.array_codec = array_codec
         self.vnodes = vnodes
         self._dir = tempfile.mkdtemp(prefix="colmena-vs-")
         self._owner_pid = os.getpid()
@@ -271,7 +320,8 @@ class ShardedValueServer:
 
     @classmethod
     def connect(cls, addresses: List[tuple], vnodes: int = 64,
-                replicas: Optional[int] = None) -> "ShardedValueServer":
+                replicas: Optional[int] = None,
+                array_codec: bool = True) -> "ShardedValueServer":
         """Attach to already-running shard processes (a cluster
         launcher's) instead of spawning them.  The client first asks the
         shards for the current ring (``vs_ring``): if one was pushed
@@ -283,6 +333,7 @@ class ShardedValueServer:
         owns the shard processes."""
         assert addresses, "connect() needs at least one shard address"
         self = cls.__new__(cls)
+        self.array_codec = array_codec
         self.vnodes = vnodes
         self._dir = None
         self._owner_pid = None              # not ours to shut down
@@ -469,7 +520,14 @@ class ShardedValueServer:
 
     def put(self, value, *, size: Optional[int] = None, refs: int = 0,
             sync: bool = False) -> str:
-        data = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
+        # dense arrays (numpy / jax device arrays) take the typed codec
+        # path: raw buffer behind a dtype/shape header, never a pickle
+        # of the array body (ndcodec module docstring).  Everything else
+        # pickles as before; the formats self-describe, so readers need
+        # no flag agreement with the writer.
+        data = ndcodec.encode(value) if self.array_codec else None
+        if data is None:
+            data = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
         if size is None:
             size = len(data)
         # key is minted client-side so routing needs no coordination; the
@@ -594,7 +652,10 @@ class ShardedValueServer:
                            + header["op"])
 
     def get(self, key: str):
-        return pickle.loads(self._get_bytes(key))
+        # ndcodec.decode falls through to pickle.loads for plain
+        # pickles, so a codec-off writer and codec-on reader (or the
+        # reverse) always interoperate
+        return ndcodec.decode(self._get_bytes(key))
 
     def _get_bytes(self, key: str) -> bytes:
         def hit(h, payload, i):
@@ -735,20 +796,27 @@ class ShardedValueServer:
         """Adopt ``new_members``, push the bumped ring to every shard,
         and migrate exactly the copies whose replica set changed.
 
-        Ordering: the new ring is installed locally and pushed to the
-        shards *before* any data moves, so (a) this client's migration
-        ops are never flagged stale and (b) other clients redirect off
-        old members immediately.  A concurrent ``get`` of a key mid-move
-        can transiently miss on its new home and fall through to a
-        replica; campaigns drive membership changes from quiesced points
-        (launcher restart, resume) where that window is empty."""
+        Ordering: the old members are inventoried and every receiving
+        shard is told which keys are incoming (``vs_expect``) *before*
+        the bumped ring is pushed and any data moves -- so from the very
+        first frame a redirected client can route by the new ring, a
+        mid-move ``get`` of a not-yet-landed key **blocks at its new
+        home until the copy arrives** instead of answering a transient
+        miss (which a replicas=1 deployment has no replica to absorb).
+        The expect window is closed in a ``finally`` (``vs_end_expect``)
+        so keys whose transfer failed answer their miss instead of
+        stalling gets until the shard-side timeout.  Concurrent *puts*
+        remain subject to the quiesced-point caveat: a put landing on a
+        departing member between the inventory and the ring push is
+        invisible to this migration (campaigns drive membership changes
+        from launcher restart / resume, where no puts are in flight)."""
         self.flush_replication()
         with self._meta_lock:
             old_members = list(self._members)
             self._install_ring(new_members, self._epoch + 1)
+            epoch = self._epoch
             push_targets = {sid: addr for sid, addr in old_members}
             push_targets.update(dict(self._members))
-        self._push_ring(sorted(push_targets.items()))
         # inventory: key -> holders (replicas disagree only transiently;
         # refs take the max so a pinned copy can never lose its pin)
         holders: Dict[str, dict] = {}
@@ -765,31 +833,55 @@ class ShardedValueServer:
                 info["refs"] = max(info["refs"], refs)
                 info["tiers"][sid] = tier
         R = min(self.replicas, len(new_members))
-        moved = 0
+        incoming: Dict[int, set] = {}
         for key, info in holders.items():
-            new_set = self._ring.nodes(key, R)
-            have = info["tiers"]
-            placed = sum(1 for s in new_set if s in have)
-            for dst in new_set:
-                if dst in have:
+            for dst in self._ring.nodes(key, R):
+                if dst not in info["tiers"]:
+                    incoming.setdefault(dst, set()).add(key)
+        announced: List[int] = []
+        for dst in sorted(incoming):
+            try:
+                self._send(dst, {"op": "vs_expect", "epoch": epoch,
+                                 "keys": sorted(incoming[dst])},
+                           retry=True)
+                announced.append(dst)
+            except (ConnectionError, OSError, RuntimeError):
+                pass                # unreachable dst: transfers fail too
+        moved = 0
+        try:
+            self._push_ring(sorted(push_targets.items()))
+            for key, info in holders.items():
+                new_set = self._ring.nodes(key, R)
+                have = info["tiers"]
+                placed = sum(1 for s in new_set if s in have)
+                for dst in new_set:
+                    if dst in have:
+                        continue
+                    src = next((s for s in new_set if s in have),
+                               next(iter(have)))
+                    if self._transfer(key, src, dst, info["size"],
+                                      info["refs"], have[src]):
+                        moved += 1
+                        placed += 1
+                if placed == 0:
+                    # every transfer into the new replica set failed
+                    # (e.g. the new home is momentarily unreachable):
+                    # deleting the departing copies now would destroy
+                    # the key's ONLY copies -- leave them where they
+                    # are; a later rebalance re-derives placement from
+                    # the surviving holders
                     continue
-                src = next((s for s in new_set if s in have),
-                           next(iter(have)))
-                if self._transfer(key, src, dst, info["size"],
-                                  info["refs"], have[src]):
-                    moved += 1
-                    placed += 1
-            if placed == 0:
-                # every transfer into the new replica set failed (e.g.
-                # the new home is momentarily unreachable): deleting the
-                # departing copies now would destroy the key's ONLY
-                # copies -- leave them where they are; a later rebalance
-                # re-derives placement from the surviving holders
-                continue
-            for sid in set(have) - set(new_set):
+                for sid in set(have) - set(new_set):
+                    try:
+                        self._send(sid, {"op": "vs_delete", "key": key})
+                    except (ConnectionError, OSError):
+                        pass
+        finally:
+            for dst in announced:
                 try:
-                    self._send(sid, {"op": "vs_delete", "key": key})
-                except (ConnectionError, OSError):
+                    self._send(dst, {"op": "vs_end_expect",
+                                     "epoch": epoch}, retry=True)
+                except (ConnectionError, OSError, RuntimeError):
                     pass
         self.client_stats["migrated_keys"] += moved
         return moved

@@ -105,7 +105,14 @@ class ValueServer:
         keys client-side so consistent-hash routing needs no handshake)."""
         key = key or uuid.uuid4().hex
         if size is None:
-            size = len(pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL))
+            # arrays are sized from their buffer (matching the sharded
+            # deployment's typed codec bytes); a pickle of a large device
+            # array just to measure it would defeat the pickle-free path
+            from repro.core.transport import ndcodec
+            size = ndcodec.nbytes_of(value)
+            if size is None:
+                size = len(pickle.dumps(value,
+                                        protocol=pickle.HIGHEST_PROTOCOL))
         with self._lock:
             self._await_key_locked(key)
             # putting over an existing key replaces it wholesale: the old

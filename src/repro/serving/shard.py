@@ -353,12 +353,17 @@ class ServeLoop:
 
 def inference_shard_main(address: tuple, spec: ServeSpec, *,
                          lease_timeout: float = 30.0,
-                         identity: str = "infer-shard") -> None:
+                         identity: str = "infer-shard",
+                         env: Optional[dict] = None) -> None:
     """Entry point of a forked shard process: dial the broker that homes
     the serve topic, build the engine (first jax import happens here,
-    inside the child), serve until a stop envelope or SIGTERM."""
+    inside the child), serve until a stop envelope or SIGTERM.  ``env``
+    entries (``ClusterSpec.env_for``) are applied before the engine
+    build so XLA-style variables precede the first jax import."""
     from repro.core.transport.proc import ProcTransport
 
+    if env:
+        os.environ.update(env)
     stop = threading.Event()
 
     def _sigterm(signum, frame):
@@ -377,13 +382,14 @@ def inference_shard_main(address: tuple, spec: ServeSpec, *,
 
 def start_inference_shard(address: tuple, spec: ServeSpec, *,
                           lease_timeout: float = 30.0,
-                          identity: str = "infer-shard"):
+                          identity: str = "infer-shard",
+                          env: Optional[dict] = None):
     """Fork one shard process against ``address`` (a broker reachable
     with the serve topic).  Used by the cluster launcher, the serving
     bench, and the chaos tests."""
     p = _mp.Process(target=inference_shard_main, args=(address, spec),
                     kwargs={"lease_timeout": lease_timeout,
-                            "identity": identity},
+                            "identity": identity, "env": env},
                     daemon=True, name=f"colmena-{identity}")
     p.start()
     return p

@@ -1,0 +1,15 @@
+"""Fixture: a consumer unlinking the shared-memory segment it just
+read -- segment ownership transferred to the broker with the frame, and
+an expired lease redelivers the descriptor to the NEXT consumer; this
+unlink destroys that redelivered copy's payload.
+Must trip the shm-segment-lifecycle pass."""
+from repro.core.transport import shm
+
+
+def consume(desc):
+    try:
+        data = shm.read_segment(desc)
+    except OSError:
+        return None
+    shm.unlink_segment(desc)            # consumers only map and read
+    return data

@@ -388,6 +388,55 @@ def test_worker_sigkill_redelivers_to_other_worker(tmp_path):
         queues.shutdown()
 
 
+@pytest.mark.slow
+def test_worker_sigkill_with_shm_payload_no_orphan_segments():
+    """The direct-path acceptance chaos: a task whose payload rides the
+    shared-memory lane survives its worker's SIGKILL -- the broker still
+    owns the segment, the lease expires, the redelivery resolves the
+    same bytes exactly once, and when the dust settles no segment is
+    orphaned."""
+    from repro.core.transport import shm
+    if shm.shm_dir() is None:
+        pytest.skip("no /dev/shm tmpfs")
+    queues = ColmenaQueues(["t"], backend="proc", lease_timeout=1.0)
+    pool = ProcessPoolTaskServer(queues, workers_per_topic=2)
+
+    def slow_digest(blob):
+        time.sleep(0.6)
+        return (os.getpid(), len(blob))
+
+    pool.register(slow_digest, name="t")
+    try:
+        scope = queues.transport._owned_scope
+        assert scope is not None
+        with pool:
+            payload = os.urandom(512 * 1024)    # over SHM_THRESHOLD
+            tid = queues.send_task(payload, method="t", topic="t")
+            deadline = time.time() + 10
+            while not pool.task_history.get(tid) and time.time() < deadline:
+                time.sleep(0.01)
+            history = pool.task_history.get(tid)
+            assert history, "task never started"
+            victim = _pid_of(history[0])
+            os.kill(victim, signal.SIGKILL)     # mid-task: lease unacked
+            r = queues.get_result("t", timeout=30)
+            assert r is not None and r.success
+            assert r.value == (_pid_of(r.worker), len(payload))
+            assert r.value[0] != victim
+            # exactly once: no duplicate completion ever arrives
+            assert queues.get_result("t", timeout=1.5) is None
+            assert queues.active_count == 0
+            # every segment (request payload, and the result's if it rode
+            # shm) is reclaimed once acks settle -- the victim's death
+            # must not leak its in-flight segment
+            deadline = time.time() + 10
+            while shm.live_segments(scope) and time.time() < deadline:
+                time.sleep(0.05)
+            assert shm.live_segments(scope) == []
+    finally:
+        queues.shutdown()
+
+
 # ---------------------------------------------------------------------------
 # chaos: kill -9 the whole campaign after a snapshot, then resume
 # ---------------------------------------------------------------------------

@@ -279,6 +279,93 @@ class TestFrameHeaderHygiene:
         assert lint_source(src, "frame-header-hygiene",
                            rel="src/repro/core/value_server.py") == []
 
+    def test_blob_under_shm_descriptor_key_flagged(self):
+        src = ('import pickle\n'
+               'def f(header, payload):\n'
+               '    header["shm"] = pickle.dumps(payload)\n')
+        fs = lint_source(src, "frame-header-hygiene")
+        assert len(fs) == 1 and "descriptor" in fs[0].message
+
+    def test_blob_under_meta_shm_key_flagged(self):
+        src = ('import pickle\n'
+               'def f(meta, payload):\n'
+               '    meta["_shm"] = pickle.dumps(payload)\n')
+        assert len(lint_source(src, "frame-header-hygiene")) == 1
+
+    def test_plain_descriptor_assignment_ok(self):
+        src = ('def f(header, desc):\n'
+               '    header["shm"] = desc\n')
+        assert lint_source(src, "frame-header-hygiene") == []
+
+
+class TestShmSegmentLifecycle:
+    def test_unguarded_create_flagged(self):
+        src = ('from repro.core.transport import shm\n'
+               'def export(scope, data):\n'
+               '    desc = shm.create_segment(scope, data)\n'
+               '    shm.sweep_scope(scope)\n'
+               '    return desc\n')
+        fs = lint_source(src, "shm-segment-lifecycle")
+        assert len(fs) == 1 and "fallback" in fs[0].message
+
+    def test_guarded_create_with_sweep_ok(self):
+        src = ('from repro.core.transport import shm\n'
+               'def export(scope, data):\n'
+               '    try:\n'
+               '        return shm.create_segment(scope, data)\n'
+               '    except OSError:\n'
+               '        return None\n'
+               'def teardown(scope):\n'
+               '    shm.sweep_scope(scope)\n')
+        assert lint_source(src, "shm-segment-lifecycle") == []
+
+    def test_create_without_scope_sweep_flagged(self):
+        src = ('from repro.core.transport import shm\n'
+               'def export(scope, data):\n'
+               '    try:\n'
+               '        return shm.create_segment(scope, data)\n'
+               '    except OSError:\n'
+               '        return None\n')
+        fs = lint_source(src, "shm-segment-lifecycle")
+        assert len(fs) == 1 and "sweep" in fs[0].message
+
+    def test_consumer_unlink_flagged(self):
+        src = ('from repro.core.transport import shm\n'
+               'def consume(desc):\n'
+               '    try:\n'
+               '        data = shm.read_segment(desc)\n'
+               '    except OSError:\n'
+               '        return None\n'
+               '    shm.unlink_segment(desc)\n'
+               '    return data\n')
+        fs = lint_source(src, "shm-segment-lifecycle")
+        assert len(fs) == 1 and "ownership" in fs[0].message
+
+    def test_unguarded_consumer_read_flagged(self):
+        src = ('from repro.core.transport import shm\n'
+               'def consume(desc):\n'
+               '    return shm.read_segment(desc)\n')
+        fs = lint_source(src, "shm-segment-lifecycle")
+        assert len(fs) == 1 and "raced" in fs[0].message
+
+    def test_broker_owns_its_reads_and_unlinks(self):
+        # in the owner module an unguarded read and an unlink are the
+        # protocol, not violations
+        src = ('from repro.core.transport import shm\n'
+               'def destroy(meta):\n'
+               '    data = shm.read_segment(meta["_shm"])\n'
+               '    shm.unlink_segment(meta["_shm"])\n'
+               '    return data\n')
+        assert lint_source(src, "shm-segment-lifecycle",
+                           rel="src/repro/core/transport/broker.py") == []
+
+    def test_shm_module_itself_exempt(self):
+        src = ('import os\n'
+               'def unlink_segment(desc):\n'
+               '    os.unlink(desc["name"])\n')
+        assert lint_source(src, "shm-segment-lifecycle",
+                           rel="src/repro/core/transport/shm.py") == []
+
 
 # ---------------------------------------------------------------------------
 # pragmas
@@ -318,6 +405,7 @@ FIXTURE_EXPECT = [
     ("bad_thread_leak.py", "thread-lifecycle", 11),
     ("bad_wallclock_deadline.py", "monotonic-deadlines", 8),
     ("bad_header_pickle.py", "frame-header-hygiene", 11),
+    ("bad_shm_consumer_unlink.py", "shm-segment-lifecycle", 14),
 ]
 
 

@@ -29,10 +29,26 @@ def proc_queues():
 # process pool: true OS-process workers
 # ---------------------------------------------------------------------------
 
-def test_pool_executes_in_worker_processes(proc_queues):
+def test_pool_executes_in_worker_processes(proc_queues, tmp_path):
     queues = proc_queues(["t"])
     pool = ProcessPoolTaskServer(queues, workers_per_topic=2)
-    pool.register(lambda: os.getpid(), name="t")
+    sync = str(tmp_path)
+
+    def task():
+        # directly-subscribed workers race for tasks, so a fast worker
+        # could legitimately drain all six before its sibling finishes
+        # starting -- hold each task open until both pids have shown up
+        # (bounded), making "both workers participated" deterministic
+        pid = os.getpid()
+        open(os.path.join(sync, f"{pid}.pid"), "w").close()
+        deadline = time.monotonic() + 10
+        while (time.monotonic() < deadline
+               and len([n for n in os.listdir(sync)
+                        if n.endswith(".pid")]) < 2):
+            time.sleep(0.01)
+        return pid
+
+    pool.register(task, name="t")
     with pool:
         for _ in range(6):
             queues.send_task(method="t", topic="t")
@@ -455,6 +471,89 @@ def test_add_shard_migrates_fraction_and_redirects_stale_client():
         vs.shutdown()
 
 
+def test_mid_move_get_blocks_until_expected_key_lands():
+    """The no-fallback regression (replicas=1 has no replica to absorb a
+    transient migration miss): a get for a key the shard was told to
+    expect (``vs_expect``) HOLDS its reply until the copy lands, and a
+    closed window (``vs_end_expect``) releases held gets to answer the
+    miss."""
+    import threading
+    from repro.core.transport import frames
+    vs = ShardedValueServer(2, replicas=1)
+    try:
+        sid, addr = vs._members[0]
+        probe = frames.FrameClient(tuple(addr))
+        data = b"migrating" * 50
+        vs._send(sid, {"op": "vs_expect", "epoch": 10**6,
+                       "keys": ["inflight", "neverlands"]})
+        got = []
+        th = threading.Thread(target=lambda: got.append(
+            probe.request({"op": "vs_get", "key": "inflight"})))
+        th.start()
+        time.sleep(0.3)
+        assert th.is_alive()                # held, not a miss
+        vs._send(sid, {"op": "vs_put", "key": "inflight",
+                       "size": len(data), "refs": 0}, data)
+        th.join(timeout=5)
+        assert not th.is_alive()
+        h, payload = got[0]
+        assert h["ok"] and payload == data
+        # a key the migration never delivers answers its miss the moment
+        # the window closes -- no 30s stall
+        got2 = []
+        th2 = threading.Thread(target=lambda: got2.append(
+            probe.request({"op": "vs_get", "key": "neverlands"})))
+        th2.start()
+        time.sleep(0.2)
+        assert th2.is_alive()
+        vs._send(sid, {"op": "vs_end_expect", "epoch": 10**6})
+        th2.join(timeout=5)
+        assert not th2.is_alive()
+        assert got2[0][0]["ok"] is False
+    finally:
+        vs.shutdown()
+
+
+def test_rebalance_mid_move_gets_never_miss_with_single_replica():
+    """End-to-end: a slowed migration (replicas=1, so every mid-move key
+    has exactly ONE copy) runs concurrently with a client hammering gets
+    -- every get returns the right bytes; none sees the pre-expect
+    KeyError."""
+    import threading
+    vs = ShardedValueServer(3, replicas=1)
+    orig_transfer = ShardedValueServer._transfer
+    try:
+        vals = {vs.put(os.urandom(300)): None for _ in range(30)}
+        vals = {k: vs.get(k) for k in vals}
+        reader = ShardedValueServer.connect([a for _, a in vs._members])
+
+        def slow_transfer(self, *a, **kw):
+            time.sleep(0.05)                # widen the mid-move window
+            return orig_transfer(self, *a, **kw)
+
+        ShardedValueServer._transfer = slow_transfer
+        errs = []
+
+        def hammer():
+            try:
+                for _ in range(8):
+                    for k, v in vals.items():
+                        assert reader.get(k) == v
+            except Exception as e:          # noqa: BLE001
+                errs.append(e)
+
+        th = threading.Thread(target=hammer)
+        th.start()
+        _, moved = vs.add_shard()
+        th.join(timeout=120)
+        assert not th.is_alive()
+        assert moved > 0
+        assert errs == [], errs
+    finally:
+        ShardedValueServer._transfer = orig_transfer
+        vs.shutdown()
+
+
 def test_remove_shard_drains_its_keys():
     vs = ShardedValueServer(3)
     try:
@@ -526,3 +625,166 @@ def test_value_server_snapshot_roundtrip_includes_spill_tier(tmp_path):
     for k in (ka, kb, kc):
         assert vs2.get(k) == vs.get(k)      # both tiers round-trip
     assert vs2._store[ka].refs == 1         # pins survive the round-trip
+
+
+# ---------------------------------------------------------------------------
+# typed array codec: device arrays never pass through pickle
+# ---------------------------------------------------------------------------
+
+def test_device_array_roundtrip_never_pickles_array_body(monkeypatch):
+    """The acceptance codec test: putting/getting a >= 1 MB jax device
+    array through the sharded VS must not hand the array (or its host
+    view) to ``pickle.dumps`` -- the body rides as a raw typed buffer.
+    Tiny header dicts still pickle; only array-typed arguments are
+    banned."""
+    import pickle as _pickle
+    import jax
+    import jax.numpy as jnp
+
+    arr = jnp.arange(1 << 18, dtype=jnp.float32).reshape(512, 512)  # 1 MiB
+    real_dumps = _pickle.dumps
+    offenders = []
+
+    def guarded(obj, *a, **kw):
+        if isinstance(obj, (np.ndarray, jax.Array)):
+            offenders.append(type(obj))
+        return real_dumps(obj, *a, **kw)
+
+    vs = ShardedValueServer(2, replicas=2)
+    try:
+        monkeypatch.setattr(_pickle, "dumps", guarded)
+        key = vs.put(arr, sync=True)
+        out = vs.get(key)
+        monkeypatch.undo()
+        assert offenders == [], offenders
+        assert isinstance(out, jax.Array)
+        assert np.array_equal(np.asarray(out), np.asarray(arr))
+        # the stored bytes are the typed format, not a pickle stream
+        assert vs._get_bytes(key).startswith(b"NDC1")
+        # a codec-off client still reads a codec-on writer's value (the
+        # formats self-describe) -- and the reverse
+        plain = ShardedValueServer.connect(
+            [a for _, a in vs._members], array_codec=False)
+        assert np.array_equal(np.asarray(plain.get(key)), np.asarray(arr))
+        k2 = plain.put(np.asarray(arr))
+        assert np.array_equal(np.asarray(vs.get(k2)), np.asarray(arr))
+        assert not vs._get_bytes(k2).startswith(b"NDC1")
+    finally:
+        vs.shutdown()
+
+
+def test_ndcodec_declines_objects_and_passes_pickles_through():
+    from repro.core.transport import ndcodec
+    assert ndcodec.encode([1, 2, 3]) is None
+    assert ndcodec.encode(np.array([{"a": 1}], dtype=object)) is None
+    import pickle as _pickle
+    blob = _pickle.dumps({"x": (1, 2)})
+    assert ndcodec.decode(blob) == {"x": (1, 2)}
+    a = np.arange(12, dtype=np.int64).reshape(3, 4)
+    out = ndcodec.decode(ndcodec.encode(a))
+    assert np.array_equal(out, a) and out.dtype == a.dtype
+    assert ndcodec.nbytes_of(a) == a.nbytes + ndcodec.HEADER_PAD
+    assert ndcodec.nbytes_of("not an array") is None
+
+
+# ---------------------------------------------------------------------------
+# shared-memory payload lane: segment lifecycle
+# ---------------------------------------------------------------------------
+
+def _shm_available():
+    from repro.core.transport import shm
+    return shm.shm_dir() is not None
+
+
+@pytest.mark.skipif(not _shm_available(), reason="no /dev/shm tmpfs")
+def test_shm_segment_lifecycle_and_sweep():
+    from repro.core.transport import shm
+    scope = shm.new_scope()
+    data = os.urandom(300_000)
+    desc = shm.create_segment(scope, data)
+    assert desc is not None and desc["size"] == len(data)
+    assert shm.read_segment(desc) == data
+    assert shm.live_segments(scope) == [desc["name"]]
+    shm.unlink_segment(desc)
+    shm.unlink_segment(desc)                # idempotent: no double-free
+    assert shm.live_segments(scope) == []
+    # a SIGKILLed producer leaks segments no registry saw: the sweep is
+    # the teardown backstop that reclaims the whole scope
+    descs = [shm.create_segment(scope, b"x" * 1000) for _ in range(3)]
+    assert len(shm.live_segments(scope)) == 3
+    assert sorted(shm.sweep_scope(scope)) == sorted(d["name"] for d in descs)
+    assert shm.live_segments(scope) == []
+
+
+@pytest.mark.skipif(not _shm_available(), reason="no /dev/shm tmpfs")
+def test_shm_segment_fork_safe():
+    """A descriptor made before a fork resolves in the child (segments
+    are named files, not handles), and the child's exit does not unlink
+    what it only read."""
+    import multiprocessing
+    from repro.core.transport import shm
+    ctx = multiprocessing.get_context("fork")
+    scope = shm.new_scope()
+    data = os.urandom(64_000)
+    desc = shm.create_segment(scope, data)
+
+    def child(d, q):
+        q.put(shm.read_segment(d) == data)
+
+    q = ctx.SimpleQueue()
+    p = ctx.Process(target=child, args=(desc, q))
+    p.start()
+    assert q.get() is True
+    p.join(timeout=5)
+    # the parent's copy is untouched by the child's read + exit
+    assert shm.read_segment(desc) == data
+    shm.unlink_segment(desc)
+    assert shm.live_segments(scope) == []
+
+
+@pytest.mark.skipif(not _shm_available(), reason="no /dev/shm tmpfs")
+def test_shm_consumer_killed_between_recv_and_ack_redelivers():
+    """A consumer SIGKILLed after resolving a shm-borne payload but
+    before acking must not take the segment with it: the broker still
+    owns the descriptor, the lease expires, and the redelivery resolves
+    the SAME segment -- which is unlinked exactly once, on the final
+    ack."""
+    import multiprocessing
+    import pickle
+    import signal as _signal
+    from repro.core.transport import shm
+    from repro.core.transport.base import Envelope
+    from repro.core.transport.proc import ProcTransport
+    from repro.utils.timing import now
+
+    ctx = multiprocessing.get_context("fork")
+    tr = ProcTransport(lease_timeout=1.0, shm_threshold=1024)
+    try:
+        scope = tr._owned_scope
+        assert scope is not None
+        ch = tr.channel("t", "requests")
+        payload = os.urandom(200_000)
+        ch.put(Envelope(now(), pickle.dumps(payload), {"task_id": "big"}))
+        assert len(shm.live_segments(scope)) == 1   # riding shared memory
+
+        def doomed(addr):
+            t2 = ProcTransport(address=addr, lease_timeout=1.0)
+            c2 = t2.channel("t", "requests")
+            envs = c2.get_batch(1)
+            assert pickle.loads(envs[0].data) == payload
+            os.kill(os.getpid(), _signal.SIGKILL)   # pre-ack: lease dies
+
+        p = ctx.Process(target=doomed, args=(tr.address,))
+        p.start()
+        p.join(timeout=10)
+        # lease expires; the surviving consumer gets the same bytes
+        envs = ch.get_batch(1, timeout=10)
+        assert envs and pickle.loads(envs[0].data) == payload
+        assert envs[0].meta.get("redelivered", 0) >= 1
+        ch.ack(flush=True)
+        deadline = time.time() + 5
+        while shm.live_segments(scope) and time.time() < deadline:
+            time.sleep(0.05)
+        assert shm.live_segments(scope) == []       # no orphans
+    finally:
+        tr.close()
