@@ -54,6 +54,7 @@ def run(T: int = 200, I: int = 1 << 20, N: int = 8, D: float = 0.005):
                  "expect >0 at 1MB"))
     rows.extend(_d0_rows(T, N))
     rows.extend(_direct_rows(T, N))
+    rows.extend(_trace_rows(T, N))
     # proc-backend 1MB row alongside the fig5 numbers: what crossing real
     # process boundaries (and the sharded VS) costs at the paper's I=1MB
     for use_vs in (False, True):
@@ -107,6 +108,68 @@ def _direct_rows(T: int, N: int, reps: int = 3):
              "remote-Thinker wall / co-homed single-broker floor, same "
              f"2-host fabric (interleaved, best of {reps} each); "
              "acceptance <=1.1x")]
+
+
+def _trace_rows(T: int, N: int, reps: int = 3):
+    """What the tracing plane costs when it is ON: the same D=0
+    proc-backend dispatch-floor config, one arm untraced, one arm at
+    the *default* sampling rate (the shipped knob -- this ratio is the
+    CI acceptance gate, ``--max-trace-overhead-ratio``, bound 1.05x),
+    and one informational arm at ``trace_sample=1.0`` (every task
+    emits its full span set through every hop -- the worst case, kept
+    visible so a hot-path regression in the tracer shows up even when
+    sampling hides it from the gate).  Arms are interleaved and
+    best-of-``reps`` like the cluster ratio.  The obs env is scrubbed
+    before the off arm because ``run_synapp`` exports it process-wide
+    for the fabric's forked children."""
+    import os
+    import shutil
+    import tempfile
+
+    from repro import observability as obs
+    from repro.observability import trace as obs_trace
+
+    base = dict(T=T, D=0.0, I=1 << 10, O=0, N=N,
+                use_value_server=False, backend="proc")
+    off_us = dflt_us = full_us = None
+    n_results = 0
+    sink_root = tempfile.mkdtemp(prefix="repro-bench-obs-")
+
+    def scrub():
+        os.environ.pop(obs.ENV_DIR, None)
+        os.environ.pop(obs.ENV_SAMPLE, None)
+        obs_trace._T._pid = -1              # tracer re-reads the env
+
+    try:
+        for rep in range(reps):
+            scrub()
+            off = run_synapp(SynConfig(**base))["per_task_wall"] * 1e6
+            scrub()
+            res = run_synapp(SynConfig(
+                **base, trace_sample=obs.DEFAULT_SAMPLE,
+                trace_dir=f"{sink_root}/dflt{rep}"))
+            dflt = res["per_task_wall"] * 1e6
+            n_results = res["n_results"]
+            scrub()
+            full = run_synapp(SynConfig(
+                **base, trace_sample=1.0,
+                trace_dir=f"{sink_root}/full{rep}"))["per_task_wall"] * 1e6
+            off_us = off if off_us is None else min(off_us, off)
+            dflt_us = dflt if dflt_us is None else min(dflt_us, dflt)
+            full_us = full if full_us is None else min(full_us, full)
+    finally:
+        scrub()
+        shutil.rmtree(sink_root, ignore_errors=True)
+    return [("d0_traced_per_task_wall[proc]", dflt_us,
+             f"n={n_results}, default sampling "
+             f"({obs.DEFAULT_SAMPLE:g}), best of {reps}; untraced "
+             f"floor={off_us:.0f}us interleaved"),
+            ("d0_trace_overhead_ratio", dflt_us / off_us,
+             "default-sampling D=0 proc wall / untraced wall "
+             f"(interleaved, best of {reps} each); acceptance <=1.05x"),
+            ("d0_trace_overhead_ratio[full]", full_us / off_us,
+             "trace_sample=1.0 wall / untraced wall -- informational "
+             "worst case, not gated")]
 
 
 def run_device_array_bench(mib: int = 8, reps: int = 5):
@@ -193,13 +256,15 @@ def run_checkpoint_bench(n_envs: int = 500, env_bytes: int = 2048):
 
 def run_quick(T: int = 100, N: int = 8):
     """The CI smoke subset: the D=0 dispatch-floor rows on both
-    backends, the direct-path cluster ratio (the row the bench-smoke
-    gate bounds -- a ratio of two interleaved walls is far less
-    machine-sensitive than any absolute-ms floor), and the
-    device-array roundtrip.  The fig5 / checkpoint sweeps still need
-    a quiet machine and stay in the full run."""
+    backends, the direct-path cluster ratio and the trace-overhead
+    ratio (the rows the bench-smoke gates bound -- a ratio of two
+    interleaved walls is far less machine-sensitive than any
+    absolute-ms floor), and the device-array roundtrip.  The fig5 /
+    checkpoint sweeps still need a quiet machine and stay in the
+    full run."""
     rows = _d0_rows(T, N)
     rows.extend(_direct_rows(T, N))
+    rows.extend(_trace_rows(T, N))
     rows.extend(run_device_array_bench())
     return rows
 
@@ -229,6 +294,11 @@ def main(argv=None) -> int:
                    help="fail (exit 1) if cluster_d0_direct_ratio (the "
                         "direct-path cluster wall over the single-broker "
                         "proc floor, same run) exceeds this")
+    p.add_argument("--max-trace-overhead-ratio", type=float, default=0.0,
+                   metavar="X",
+                   help="fail (exit 1) if d0_trace_overhead_ratio (the "
+                        "fully-traced D=0 proc wall over the untraced "
+                        "wall, interleaved) exceeds this")
     args = p.parse_args(argv)
     if args.quick:
         rows = run_quick(**({} if args.T is None else {"T": args.T}))
@@ -263,6 +333,17 @@ def main(argv=None) -> int:
             return 1
         print(f"OK: cluster_d0_direct_ratio {ratio:.2f}x within "
               f"{args.max_cluster_direct_ratio:.2f}x")
+    if args.max_trace_overhead_ratio:
+        ratio = next(v for n, v, _ in rows
+                     if n == "d0_trace_overhead_ratio")
+        if ratio > args.max_trace_overhead_ratio:
+            print(f"FAIL: d0_trace_overhead_ratio {ratio:.2f}x exceeds "
+                  f"the {args.max_trace_overhead_ratio:.2f}x acceptance "
+                  "bound (full-sampling tracing should stay in the "
+                  "dispatch-floor noise)")
+            return 1
+        print(f"OK: d0_trace_overhead_ratio {ratio:.2f}x within "
+              f"{args.max_trace_overhead_ratio:.2f}x")
     return 0
 
 

@@ -27,6 +27,10 @@ mechanical check over ``src/repro/core/**``:
 - **frame-header-hygiene** -- wire headers are plain dicts with string
   keys and primitive values; envelope payload bytes ride the frame body
   and are relayed verbatim, never re-pickled (single-pickle-per-hop).
+- **span-name-registry** -- every ``obs.span``/``obs.counter``/... call
+  in fabric code names a literal declared in
+  ``repro.observability.names``; an undeclared or dynamic name silently
+  fragments the merged timeline and the metrics rollup.
 
 False positives are suppressed in place with a justified pragma::
 
@@ -48,6 +52,7 @@ from pathlib import Path
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
 
 from repro.analysis.idempotent_ops import IDEMPOTENT_OPS
+from repro.observability.names import METRIC_NAMES, SPAN_NAMES
 
 REPO_ROOT = Path(__file__).resolve().parents[3]
 # the fabric's concurrency surface: the dispatch core plus the serving
@@ -625,6 +630,57 @@ def pass_shm_segment_lifecycle(ctx: FileCtx) -> List[Finding]:
     return out
 
 
+# obs.<method> -> (index of the name argument, registry, registry label)
+_OBS_NAME_SITES = {
+    "span": (1, SPAN_NAMES, "SPAN_NAMES"),
+    "instant": (1, SPAN_NAMES, "SPAN_NAMES"),
+    "counter": (0, METRIC_NAMES, "METRIC_NAMES"),
+    "gauge": (0, METRIC_NAMES, "METRIC_NAMES"),
+    "histo": (0, METRIC_NAMES, "METRIC_NAMES"),
+    "observe": (0, METRIC_NAMES, "METRIC_NAMES"),
+}
+
+
+def pass_span_name_registry(ctx: FileCtx) -> List[Finding]:
+    """Span and metric names are the join keys of the whole
+    observability plane: the report merges per-process sinks by name,
+    and the Fig.-5 decomposition maps span names onto Timer components.
+    A typo'd or dynamically built name doesn't error -- it just
+    fragments the timeline into series nobody aggregates.  Every
+    ``obs.span``/``obs.instant``/``obs.counter``/``obs.gauge``/
+    ``obs.histo``/``obs.observe`` call site (the ``from repro import
+    observability as obs`` convention) must therefore name a literal
+    declared in ``repro.observability.names``."""
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "obs"
+                and node.func.attr in _OBS_NAME_SITES):
+            continue
+        idx, registry, label = _OBS_NAME_SITES[node.func.attr]
+        name_arg = node.args[idx] if len(node.args) > idx else next(
+            (kw.value for kw in node.keywords if kw.arg == "name"), None)
+        if name_arg is None:
+            continue                    # malformed call: TypeError at runtime
+        if not (isinstance(name_arg, ast.Constant)
+                and isinstance(name_arg.value, str)):
+            out.append(_find(
+                ctx, "span-name-registry", node,
+                f"obs.{node.func.attr}() with a non-literal name: "
+                "dynamic names fragment the merged timeline; use a "
+                "literal declared in repro/observability/names.py"))
+        elif name_arg.value not in registry:
+            out.append(_find(
+                ctx, "span-name-registry", node,
+                f"obs.{node.func.attr}({name_arg.value!r}) names an "
+                f"undeclared {node.func.attr}; add it to {label} in "
+                "repro/observability/names.py (one-line description) "
+                "so the report and rollups aggregate it"))
+    return out
+
+
 PASSES: Dict[str, Callable[[FileCtx], List[Finding]]] = {
     "wait-needs-predicate": pass_wait_needs_predicate,
     "idempotent-retry-registry": pass_idempotent_retry_registry,
@@ -633,6 +689,7 @@ PASSES: Dict[str, Callable[[FileCtx], List[Finding]]] = {
     "monotonic-deadlines": pass_monotonic_deadlines,
     "frame-header-hygiene": pass_frame_header_hygiene,
     "shm-segment-lifecycle": pass_shm_segment_lifecycle,
+    "span-name-registry": pass_span_name_registry,
 }
 
 

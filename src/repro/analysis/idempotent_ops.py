@@ -50,4 +50,9 @@ IDEMPOTENT_OPS = {
                      "twice == clearing once",
     "vs_snapshot": "read-only serialization of one shard's contents",
     "vs_stats": "read-only counter probe",
+    # observability ops (transport/broker.py; see repro/observability)
+    "clock_sync": "read-only monotonic-clock probe; the caller keeps only "
+                  "the min-RTT round, so a resend merely adds a sample",
+    "stats_scrape": "read-only queue-depth/lease/metrics snapshot "
+                    "(lease expiry it piggybacks is itself idempotent)",
 }

@@ -25,12 +25,15 @@ bundle and the VS snapshot spans the shard ring::
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import threading
 import time
 from dataclasses import dataclass
 
 import numpy as np
 
+from repro import observability as obs
 from repro.core import (ColmenaQueues, ProcessPoolTaskServer,
                         ShardedValueServer, TaskServer, ValueServer)
 from repro.core.thinker import BaseThinker, agent, result_processor
@@ -72,6 +75,11 @@ class SynConfig:
     inference_shards: int = 1    # scorer shard processes (proc/cluster
                                  # backends; the local backend serves the
                                  # proxy model from an in-process thread)
+    trace_sample: float = 0.0    # >0: distributed tracing, sampling this
+                                 # fraction of tasks (1.0 traces them all)
+    trace_dir: str = ""          # span sink directory (default: a fresh
+                                 # temp dir; feed it to
+                                 # ``repro.observability.report``)
 
 
 def proxy_scorer_factory():
@@ -316,6 +324,14 @@ def run_synapp(cfg: SynConfig, resume_from: str = ""):
         raise ValueError("checkpoint_every is set but checkpoint_path is "
                          "empty -- the first checkpoint would fail inside "
                          "the consumer thread and hang the run")
+    if cfg.trace_sample:
+        # export before any fabric process exists: forked brokers,
+        # shards and agents inherit the sink config (the cluster path
+        # additionally stamps per-host identity into agent/shard env)
+        cfg.trace_dir = (cfg.trace_dir or os.environ.get(obs.ENV_DIR)
+                         or tempfile.mkdtemp(prefix="repro-obs-"))
+        os.environ[obs.ENV_DIR] = cfg.trace_dir
+        os.environ[obs.ENV_SAMPLE] = repr(cfg.trace_sample)
     if cfg.cluster_hosts:
         if cfg.cluster_hosts < 2:
             raise ValueError("cluster_hosts simulates a multi-host fabric:"
@@ -426,6 +442,9 @@ def _metrics(cfg: SynConfig, thinker: SynThinker, makespan: float):
         # winning worker identities)
         "hosts_seen": sorted({r.worker.split("/", 1)[0]
                               for r in thinker.results if r.worker}),
+        # where the span/metric sinks landed (empty when untraced):
+        # ``python -m repro.observability.report <dir>`` renders them
+        "trace_dir": cfg.trace_dir if cfg.trace_sample else "",
     }
 
 
@@ -457,6 +476,13 @@ def main(argv=None):
                    help="checkpoint file path")
     p.add_argument("--resume", default="",
                    help="resume from this checkpoint file")
+    p.add_argument("--trace", nargs="?", const=1.0, type=float,
+                   default=0.0, metavar="RATE",
+                   help="distributed tracing: sample RATE of tasks "
+                        "(bare --trace samples all of them)")
+    p.add_argument("--trace-dir", default="", metavar="DIR",
+                   help="span sink directory (default: a fresh temp dir, "
+                        "printed at the end)")
     args = p.parse_args(argv)
     cfg = SynConfig(T=args.T, D=args.D, I=args.I, N=args.N,
                     backend=args.backend, cluster_hosts=args.cluster,
@@ -465,7 +491,8 @@ def main(argv=None):
                     score_candidates=args.score_candidates,
                     inference_shards=args.inference_shards,
                     checkpoint_every=args.checkpoint_every,
-                    checkpoint_path=args.ckpt)
+                    checkpoint_path=args.ckpt,
+                    trace_sample=args.trace, trace_dir=args.trace_dir)
     res = run_synapp(cfg, resume_from=args.resume)
     hosts = (f"  hosts {','.join(res['hosts_seen'])}"
              if args.cluster else "")
@@ -476,6 +503,9 @@ def main(argv=None):
           f"per-task wall {res['per_task_wall']*1e3:.2f}ms  "
           f"median overhead {res['total_overhead_median']*1e3:.2f}ms"
           f"{hosts}{scored}")
+    if res["trace_dir"]:
+        print(f"trace sinks: {res['trace_dir']}  (render: "
+              f"python -m repro.observability.report {res['trace_dir']})")
     return res
 
 

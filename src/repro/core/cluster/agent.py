@@ -26,6 +26,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro import observability as obs
 from repro.core.process_pool import ProcessPoolTaskServer
 from repro.core.queues import ColmenaQueues
 from repro.core.transport.proc import ProcTransport
@@ -97,6 +98,9 @@ def host_agent_main(cfg: AgentConfig) -> None:
         # before the pool forks: workers inherit this, and XLA-style
         # variables only matter if set ahead of the first jax import
         os.environ.update(cfg.env)
+    # claim the trace identity before build_pool's ColmenaQueues would
+    # default this process to "thinker": the sink header is written once
+    obs.configure(role="agent", host=cfg.host)
     stop = threading.Event()
     signal.signal(signal.SIGTERM, lambda *_: stop.set())
     pool = build_pool(cfg)

@@ -49,6 +49,7 @@ import pickle
 import threading
 from typing import Dict, Optional, Tuple
 
+from repro import observability as obs
 from repro.core.cluster.spec import host_hash_index, resolve_home
 from repro.core.transport import frames
 from repro.core.transport.broker import Broker, start_autosnapshot
@@ -220,6 +221,25 @@ def federated_broker_main(sock, host: str, partition: Dict[str, str],
     coordinator is given ``snapshot_every``: its auto-snapshot bundles
     the *whole federation* into one resumable file."""
     fb = FederatedBroker(host, partition, peers, shm_scope=shm_scope)
+    # identify this member on the fabric timeline; non-coordinators
+    # calibrate their clock against the coordinator so the report can
+    # compose every process's offset chain to one root
+    coord = sorted(peers)[0]
+    ref, offset = "", None
+    if obs.enabled() and coord != host and coord in fb._peers:
+        def _probe() -> float:
+            hdr, _ = fb._peers[coord].request({"op": "clock_sync"},
+                                              retry=True)
+            return float(hdr["t"])
+        try:
+            offset = obs.calibrate(_probe)
+            ref = obs.addr_str(peers[coord])
+        except (ConnectionError, OSError, RuntimeError, KeyError,
+                TypeError, ValueError):
+            offset = None                   # telemetry only: never fatal
+    obs.configure(role="broker", host=host,
+                  addr=obs.addr_str(peers.get(host, "")),
+                  ref=ref, offset=offset)
     stop = threading.Event()
     if snapshot_every and snapshot_path:
         start_autosnapshot(fb.fed_snapshot, snapshot_every, snapshot_path,

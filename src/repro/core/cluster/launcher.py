@@ -48,12 +48,14 @@ import tempfile
 import threading
 from typing import Dict, List, Optional
 
+from repro import observability as obs
 from repro.core.cluster.agent import AgentConfig, host_agent_main
 from repro.core.cluster.federation import federated_broker_main
 from repro.core.cluster.spec import ClusterSpec, HostSpec
 from repro.core.queues import ColmenaQueues
 from repro.core.transport import frames, shm
 from repro.core.transport.proc import ProcTransport
+from repro.observability.monitor import CampaignMonitor
 
 import multiprocessing
 
@@ -112,6 +114,7 @@ class ClusterLauncher:
         self._threads: list = []
         self._lock = threading.Lock()
         self._shm_scope: Optional[str] = None
+        self.monitor: Optional[CampaignMonitor] = None
 
     # -- bring-up -----------------------------------------------------------
 
@@ -168,7 +171,28 @@ class ClusterLauncher:
         for h in spec.hosts:
             if h.pools and h.ssh is None:
                 self._start_agent(h)
+        # 4) the campaign monitor: a launcher-side daemon scraping every
+        # broker's stats_scrape op on a cadence (live depth/lease/shm
+        # gauges -> stats-monitor.jsonl next to the trace sinks)
+        if obs.enabled():
+            self.monitor = CampaignMonitor(dict(self._addresses),
+                                           obs.obs_dir()).start()
         return self
+
+    def _host_env(self, name: str) -> Dict[str, str]:
+        """The environment a host's agent and inference shards get: the
+        spec's map (perf-env idioms + per-host overrides) over an
+        observability base.  The obs variables matter on both launch
+        paths: forked processes inherit the launcher's REPRO_OBS_DIR /
+        sample but need the per-host identity, and the ssh exec path
+        inherits nothing at all."""
+        env: Dict[str, str] = {}
+        if obs.enabled():
+            env[obs.ENV_DIR] = obs.obs_dir()
+            env[obs.ENV_SAMPLE] = str(obs.sample_rate())
+            env[obs.ENV_HOST] = name
+        env.update(self.spec.env_for(name))
+        return env
 
     def _start_shard(self, host: str, idx: int) -> dict:
         from repro.core.transport.shards import _shard_main
@@ -196,7 +220,7 @@ class ClusterLauncher:
             self.serve_spec,
             lease_timeout=self.spec.lease_timeout,
             identity=f"infer@{host}:{idx}",
-            env=self.spec.env_for(host) or None)
+            env=self._host_env(host) or None)
         entry = {"host": host, "idx": idx, "proc": p}
         self._infer_shards.append(entry)
         return entry
@@ -233,7 +257,7 @@ class ClusterLauncher:
             proxy_threshold=self.proxy_threshold,
             straggler_factor=self.straggler_factor,
             straggler_min_history=self.straggler_min_history,
-            env=self.spec.env_for(h.name))
+            env=self._host_env(h.name))
 
     def _start_agent(self, h: HostSpec) -> None:
         p = _mp.Process(target=host_agent_main, args=(self._agent_config(h),),
@@ -273,7 +297,7 @@ class ClusterLauncher:
         paths = self.write_agent_configs(config_dir)
         out = {}
         for name, path in paths.items():
-            env = self.spec.env_for(name)
+            env = self._host_env(name)
             prefix = (["env"] + [f"{k}={v}" for k, v in sorted(env.items())]
                       if env else [])
             out[name] = (["ssh", self.spec.host(name).ssh] + prefix
@@ -403,6 +427,11 @@ class ClusterLauncher:
 
     def stop(self) -> None:
         self._stop.set()
+        if self.monitor is not None:
+            # one last scrape while every broker is still up, so the
+            # stats log always ends with a complete cluster-wide sample
+            self.monitor.stop(final_scrape=True)
+            self.monitor = None
         for name, p in self._agents.items():
             if p.is_alive():
                 try:

@@ -92,6 +92,7 @@ import time
 import traceback
 from typing import Callable, Dict, Optional
 
+from repro import observability as obs
 from repro.core import message as msg
 from repro.core.queues import ColmenaQueues
 from repro.core.task_server import MethodSpec
@@ -409,6 +410,9 @@ class ProcessPoolTaskServer:
         return set_current
 
     def _worker_flush_and_exit(self):
+        # cumulative metrics: the final snapshot supersedes the throttled
+        # mid-run ones, so short-lived workers don't under-report
+        obs.flush_metrics(force=True)
         vs = self.queues.value_server
         if vs is not None and hasattr(vs, "flush_replication"):
             # drain queued replica fan-outs (async release/put copies)
@@ -425,6 +429,19 @@ class ProcessPoolTaskServer:
         requests = self._request_channel(topic)
         control = self._control_channel()
         queues = self.queues
+        # fabric-timeline identity (+ clock calibration against the
+        # connected broker when tracing is on -- telemetry, never fatal)
+        ref, offset = "", None
+        if obs.enabled():
+            try:
+                offset = obs.calibrate(queues.transport.clock_sync)
+                ref = obs.addr_str(queues.transport.address)
+            except (ConnectionError, OSError, RuntimeError, KeyError,
+                    TypeError, ValueError, AttributeError):
+                offset = None
+        obs.configure(role="worker", host=self.host, ref=ref, offset=offset)
+        t_spawn = now()
+        busy_total = 0.0
         cache: dict = {}
         stopping = [False]
         busy = [False]
@@ -478,10 +495,15 @@ class ProcessPoolTaskServer:
                  (now(), requests.held_lease(), meta.get("backup", False)))),
                 {}))
             set_hb(requests.held_lease())   # heartbeat across the execution
+            t_task = now()
             try:
                 self._execute(task, identity, requests, control, cache)
             finally:
                 set_hb(None)
+                busy_total += now() - t_task
+                obs.gauge("worker_busy_frac").set(
+                    busy_total / max(now() - t_spawn, 1e-9))
+                obs.flush_metrics()
             # the task reached a terminal handoff (result published, retry
             # requeued, or duplicate swallowed by the claim): release the
             # request-queue lease.  The ack piggybacks on the next frame
@@ -499,6 +521,11 @@ class ProcessPoolTaskServer:
                  cache: dict):
         queues = self.queues
         spec = self._methods[task.method]
+        # sampling decision made at send_task rides the envelope meta;
+        # _decode_task surfaced it (and the redelivery attempt number)
+        # as dynamic attributes
+        traced = bool(getattr(task, "trace", False))
+        attempt = int(getattr(task, "attempt", 0) or 0)
         runtime = None
         try:
             args = resolve_tree(task.args, queues.value_server, cache,
@@ -507,10 +534,20 @@ class ProcessPoolTaskServer:
                                   async_start=True)
             args = resolve_tree(args, queues.value_server, cache)
             kwargs = resolve_tree(kwargs, queues.value_server, cache)
+            if traced:
+                # written through to disk BEFORE execute: a SIGKILLed
+                # attempt is evidenced by this instant with no closing
+                # span, and the redelivered attempt starts its own
+                # sub-trace at the next attempt number
+                obs.instant(task.task_id, "task_started", attempt=attempt,
+                            worker=identity)
             t0 = now()
             value = spec.fn(*args, **kwargs)
             runtime = now() - t0
             task.timer.record("execute", runtime)
+            if traced:
+                obs.span(task.task_id, "execute", t0, t0 + runtime,
+                         attempt=attempt, worker=identity)
             result = msg.Result(
                 task_id=task.task_id, topic=task.topic, method=task.method,
                 success=True, value=value, args=task.args,
@@ -520,10 +557,16 @@ class ProcessPoolTaskServer:
             task.timer.record("execute", 0.0)
             if task.retries < spec.max_retries:
                 task.retries += 1
+                obs.counter("task_retries").inc()
                 data = msg.serialize(task)
-                requests.put(Envelope(now(), data,
-                                      {"input_size": task.input_size,
-                                       "task_id": task.task_id}))
+                retry_meta = {"input_size": task.input_size,
+                              "task_id": task.task_id}
+                if traced:
+                    # the retry is a fresh attempt: keep it sampled and
+                    # bump the attempt number its sub-trace carries
+                    retry_meta["trace"] = 1
+                    retry_meta["redelivered"] = attempt + 1
+                requests.put(Envelope(now(), data, retry_meta))
                 # tell the supervisor the attempt ended: clearing
                 # 'started' stops the straggler monitor from firing a
                 # backup for a task that is queued for retry, not
@@ -543,8 +586,10 @@ class ProcessPoolTaskServer:
         # Always on (not just under straggler_factor): a lease-expiry
         # redelivery racing a slow-but-alive original is the same race as
         # a straggler backup and needs the same arbitration.
+        result.attempt = attempt            # send_result tags its spans
         won = queues.send_result(result, claim_id=task.task_id)
         if won:
+            obs.counter("tasks_completed").inc()
             queues.release_task_inputs(task)
         control.put(Envelope(now(), pickle.dumps(
             ("done", task.task_id, identity, task.topic, runtime)), {}))

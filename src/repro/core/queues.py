@@ -39,9 +39,11 @@ from __future__ import annotations
 
 import os
 import pickle
+import tempfile
 import threading
 from typing import Iterable, List, Optional
 
+from repro import observability as obs
 from repro.core import message as msg
 from repro.core.transport import Envelope, Transport, make_transport
 from repro.core.value_server import iter_proxies, proxy_tree, resolve_tree
@@ -66,7 +68,9 @@ class ColmenaQueues:
                  lease_timeout: Optional[float] = None,
                  snapshot_every: float = 0.0,
                  snapshot_path: str = "",
-                 serve_spec=None):
+                 serve_spec=None,
+                 trace=None,
+                 trace_dir: str = ""):
         """backend: "local" (in-process deques) or "proc" (socket broker
         process); ignored when an explicit ``transport`` is given.
         release_inputs: delete one-shot proxied task inputs from the
@@ -88,7 +92,30 @@ class ColmenaQueues:
         auto-snapshots its whole state to ``snapshot_path`` every
         ``snapshot_every`` seconds (atomic tmp+rename) -- long campaigns
         get a crash-resumable file (``resume`` accepts it directly) with
-        no application checkpoint call."""
+        no application checkpoint call.
+        trace: distributed tracing sampling control.  ``True`` enables
+        span sinks at the default sample rate
+        (``observability.DEFAULT_SAMPLE``); a float in (0, 1] sets the
+        rate; ``0``/``False`` force tracing off; ``None`` (default)
+        inherits the environment (``REPRO_OBS_DIR``/``REPRO_OBS_SAMPLE``
+        -- how cluster-launched roles get theirs).  trace_dir: sink
+        directory (default: env, else a fresh temp dir, exposed as
+        ``self.trace_dir`` for ``repro.observability.report``).  The
+        sampling decision is made once per task here and rides the
+        envelope meta, so unsampled tasks cross every hop span-free."""
+        # observability config must land in the environment BEFORE the
+        # transport forks its broker, so every child role inherits it
+        if trace:
+            sample = obs.DEFAULT_SAMPLE if trace is True else float(trace)
+            trace_dir = (trace_dir or os.environ.get(obs.ENV_DIR)
+                         or tempfile.mkdtemp(prefix="repro-obs-"))
+            os.environ[obs.ENV_DIR] = trace_dir
+            os.environ[obs.ENV_SAMPLE] = repr(sample)
+        elif trace is not None:
+            os.environ.pop(obs.ENV_DIR, None)     # explicit off
+        self.trace_dir = os.environ.get(obs.ENV_DIR, "")
+        if self.trace_dir:
+            obs.configure(role="thinker")
         if transport is not None and snapshot_every:
             raise ValueError(
                 "snapshot_every configures the broker the queues fork:"
@@ -153,6 +180,11 @@ class ColmenaQueues:
         local backend; idempotent."""
         self.wake_all()
         self.transport.close()
+        if self.trace_dir:
+            # this process's buffered span tail (submit/decode spans,
+            # local-backend broker spans) must be on disk before any
+            # same-process report reads the sinks
+            obs.flush()
 
     # -- checkpoint / resume ------------------------------------------------
 
@@ -331,16 +363,28 @@ class ColmenaQueues:
                                      self.proxy_threshold, task.timer,
                                      one_shot=True)
         data = msg.timed_serialize(task, task.timer, "serialize_request")
+        t_ser = now()
         # single serialization: the measured time/size ride in the envelope
         # (proxy_put was recorded before pickling, so it already travels
-        # inside the payload; only post-pickle measurements ride in meta)
-        # task_id rides the meta so a relaying task server can track
-        # in-flight work without unpickling the payload
-        meta = {"serialize_request": task.timer.intervals["serialize_request"],
+        # inside the payload; only post-pickle measurements ride in meta).
+        # Timer measurements live in the namespaced "timers" sub-dict;
+        # top-level meta is bookkeeping (task_id so a relaying task
+        # server can track in-flight work without unpickling the
+        # payload, sizes, placement, the trace flag)
+        meta = {"timers": {"serialize_request":
+                           task.timer.intervals["serialize_request"]},
                 "input_size": len(data), "task_id": task.task_id}
+        traced = bool(self.trace_dir) and obs.sampled(task.task_id)
+        if traced:
+            meta["trace"] = 1
         with self._lock:
             self._active += 1
         self._topics[task.topic].requests.put(Envelope(now(), data, meta))
+        if traced:
+            dur = task.timer.intervals["serialize_request"]
+            obs.span(task.task_id, "serialize_request", t_ser - dur, t_ser)
+            obs.span(task.task_id, "submit", t_ser - dur, now(),
+                     topic=task.topic)
         return task.task_id
 
     @property
@@ -371,20 +415,34 @@ class ColmenaQueues:
 
     def _decode_result(self, env: Envelope) -> msg.Result:
         result: msg.Result = msg.deserialize(env.data)
-        for name, seconds in env.meta.items():
-            if name == "output_size":
-                result.output_size = seconds
-            elif name in ("task_id", "redelivered"):
-                pass                        # bookkeeping, not a timer
-            else:
-                result.timer.record(name, seconds)
-        result.timer.record("result_queue_transit", now() - env.t_put)
+        # sender-side Timer measurements ride the namespaced "timers"
+        # sub-dict; every other meta key is bookkeeping by construction,
+        # so a new top-level key can never be misrecorded as a lifecycle
+        # interval (the PR-4/PR-8 grafting-bug class, closed structurally)
+        for name, seconds in env.meta.get("timers", {}).items():
+            result.timer.record(name, seconds)
+        if "output_size" in env.meta:
+            result.output_size = env.meta["output_size"]
+        t_recv = now()
+        result.timer.record("result_queue_transit", t_recv - env.t_put)
+        traced = bool(env.meta.get("trace"))
+        attempt = int(env.meta.get("redelivered", 0) or 0)
+        if traced:
+            obs.span(result.task_id, "result_queue_transit", env.t_put,
+                     t_recv, attempt=attempt)
         # note the one-shot proxies before resolution replaces them in-tree
         one_shot = ([p for p in iter_proxies(result.value) if p.one_shot]
                     if self.value_server is not None else [])
         t0 = now()
         result.value = resolve_tree(result.value, self.value_server)
-        result.timer.record("deserialize_result", now() - t0)
+        t1 = now()
+        result.timer.record("deserialize_result", t1 - t0)
+        if traced:
+            obs.span(result.task_id, "deserialize_result", t0, t1,
+                     attempt=attempt)
+            # the envelope Timer's final totals, for the report's
+            # decomposition acceptance check
+            obs.emit_timers(result.task_id, result.timer.intervals)
         for p in one_shot:
             # result payloads have exactly one consumer: release immediately
             self.value_server.release(p.key)
@@ -447,16 +505,24 @@ class ColmenaQueues:
 
     def _decode_task(self, env: Envelope) -> msg.Task:
         task: msg.Task = msg.deserialize(env.data)
-        for name, seconds in env.meta.items():
-            if name == "input_size":
-                task.input_size = seconds
-            elif name in ("task_id", "redelivered", "backup", "bounces",
-                          "exclude_worker", "exclude_host"):
-                pass                        # bookkeeping/placement, not a timer
-            else:
-                task.timer.record(name, seconds)
-        task.timer.record("request_queue_transit", now() - env.t_put)
+        # namespaced "timers" sub-dict only -- top-level bookkeeping
+        # (task_id/redelivered/backup/bounces/exclude_*/trace/_shm) can
+        # no longer leak into Timer.intervals via a forgotten skip-list
+        # entry
+        for name, seconds in env.meta.get("timers", {}).items():
+            task.timer.record(name, seconds)
+        if "input_size" in env.meta:
+            task.input_size = env.meta["input_size"]
+        t_recv = now()
+        task.timer.record("request_queue_transit", t_recv - env.t_put)
         task.timer.mark("received_by_server")
+        # delivery-side trace context for the executing role: the
+        # sampling verdict and which redelivery attempt this is
+        task.trace = bool(env.meta.get("trace"))
+        task.attempt = int(env.meta.get("redelivered", 0) or 0)
+        if task.trace:
+            obs.span(task.task_id, "request_queue_transit", env.t_put,
+                     t_recv, attempt=task.attempt, topic=task.topic)
         return task
 
     def get_task(self, topic: str, timeout: Optional[float] = None,
@@ -498,18 +564,36 @@ class ColmenaQueues:
                                       prefix="serialize_result",
                                       one_shot=True)
         data = msg.timed_serialize(result, result.timer, "serialize_result")
+        t_ser = now()
         # task_id rides the meta (like requests) so a broker auto-snapshot
-        # can count a completed-but-unconsumed task as still active
-        meta = {"serialize_result": result.timer.intervals["serialize_result"],
+        # can count a completed-but-unconsumed task as still active;
+        # Timer measurements ride the namespaced "timers" sub-dict
+        meta = {"timers": {"serialize_result":
+                           result.timer.intervals["serialize_result"]},
                 "output_size": len(data), "task_id": result.task_id}
-        return self._topics[result.topic].results.put(
+        traced = bool(self.trace_dir) and obs.sampled(result.task_id)
+        if traced:
+            meta["trace"] = 1
+        ok = self._topics[result.topic].results.put(
             Envelope(now(), data, meta), claim=claim_id)
+        if traced:
+            dur = result.timer.intervals["serialize_result"]
+            attempt = int(getattr(result, "attempt", 0))
+            obs.span(result.task_id, "serialize_result", t_ser - dur,
+                     t_ser, attempt=attempt)
+            obs.span(result.task_id, "publish_result", t_ser, now(),
+                     attempt=attempt, claimed=bool(ok))
+        return ok
 
     def requeue(self, task: msg.Task) -> None:
         """Retry path: put a (deserialized) task back on its request queue."""
         data = msg.serialize(task)
         meta = {"input_size": task.input_size or len(data),
                 "task_id": task.task_id}
+        # the sampling decision is a deterministic hash of the task id,
+        # so a retried task keeps (or keeps lacking) its trace
+        if self.trace_dir and obs.sampled(task.task_id):
+            meta["trace"] = 1
         self._topics[task.topic].requests.put(Envelope(now(), data, meta))
 
     def release_task_inputs(self, task: msg.Task) -> None:

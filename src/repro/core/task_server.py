@@ -33,6 +33,7 @@ import traceback
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, Optional
 
+from repro import observability as obs
 from repro.core import message as msg
 from repro.core.queues import ColmenaQueues
 from repro.core.transport.base import BoundedIdSet as _BoundedIdSet
@@ -166,10 +167,16 @@ class TaskServer:
                                   cache, async_start=True)
             args = resolve_tree(args, self.queues.value_server, cache)
             kwargs = resolve_tree(kwargs, self.queues.value_server, cache)
+            if getattr(task, "trace", False):
+                obs.instant(task.task_id, "task_started",
+                            attempt=getattr(task, "attempt", 0), worker=tid)
             t0 = now()
             value = spec.fn(*args, **kwargs)
             runtime = now() - t0
             task.timer.record("execute", runtime)
+            if getattr(task, "trace", False):
+                obs.span(task.task_id, "execute", t0, t0 + runtime,
+                         attempt=getattr(task, "attempt", 0), worker=tid)
             result = msg.Result(
                 task_id=task.task_id, topic=task.topic, method=task.method,
                 success=True, value=value, args=task.args,
@@ -212,6 +219,7 @@ class TaskServer:
                 self._done_ids.add(task.task_id)
             self._inflight.pop(task.task_id, None)
             self._straggler_cond.notify_all()
+        result.attempt = getattr(task, "attempt", 0)  # tags result spans
         self.queues.send_result(result)
         # only the race *winner* gets here (dedup), and a losing duplicate
         # that resolves afterwards fails into the lost-race drop path, so

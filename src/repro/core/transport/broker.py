@@ -42,11 +42,13 @@ returns the address is connectable.
 """
 from __future__ import annotations
 
+import os
 import socket as socketlib
 import threading
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
+from repro import observability as obs
 from repro.core.transport import frames, shm
 from repro.core.transport.base import (BoundedIdSet, dump_snapshot,
                                        load_snapshot)
@@ -96,8 +98,10 @@ class Broker:
                    if deadline <= tnow]
         if not expired:
             return
+        obs.counter("expired_leases").inc(len(expired))
         for lid in expired:
             _, _, items = q.leases.pop(lid)
+            obs.counter("redeliveries").inc(len(items))
             for t_put, meta, data in reversed(items):
                 meta = dict(meta)
                 meta["redelivered"] = meta.get("redelivered", 0) + 1
@@ -133,6 +137,7 @@ class Broker:
                 if not self._claimed.claim(claim):
                     if shm_desc is not None:
                         shm.unlink_segment(shm_desc)
+                    obs.counter("claim_rejects").inc()
                     return False            # duplicate publisher: swallowed
                 with q.cond:
                     q.items.append((t_put, meta, data))
@@ -247,6 +252,7 @@ class Broker:
                             return False
                     q.items.append((t_put, m, data))
                     q.cond.notify()
+                    obs.counter("backup_clones").inc()
                     return True
         return False
 
@@ -283,6 +289,35 @@ class Broker:
         with q.cond:
             self._expire_locked(q)
             return len(q.items)
+
+    def scrape_stats(self) -> dict:
+        """The ``stats_scrape`` reply body: per-queue depth and in-flight
+        lease counts read live under each queue's own lock, the shm
+        segment count derived from envelope metas, plus this process's
+        cumulative metrics registry (expiry/claim-reject/backup
+        counters).  Read-only and idempotent by construction."""
+        with self._qlock:
+            queues = sorted(self._queues.items())
+        depth: Dict[str, int] = {}
+        inflight: Dict[str, int] = {}
+        segs = 0
+        for (topic, kind), q in queues:
+            key = f"{topic}/{kind}"
+            with q.cond:
+                self._expire_locked(q)
+                depth[key] = len(q.items)
+                leased = [it for _, _, items in q.leases.values()
+                          for it in items]
+                inflight[key] = len(leased)
+                segs += sum(1 for _, meta, _ in q.items if "_shm" in meta)
+                segs += sum(1 for _, meta, _ in leased if "_shm" in meta)
+        obs.gauge("queue_depth").set(sum(depth.values()))
+        obs.gauge("inflight_leases").set(sum(inflight.values()))
+        obs.gauge("shm_segments").set(segs)
+        return {"t": now(), "pid": os.getpid(),
+                "machine": socketlib.gethostname(),
+                "queue_depth": depth, "inflight_leases": inflight,
+                "shm_segments": segs, "metrics": obs.metrics_snapshot()}
 
     # -- shared-memory plumbing ----------------------------------------------
 
@@ -393,8 +428,17 @@ class Broker:
                 header["timeout"], header.get("epoch"),
                 header.get("lease_timeout", 30.0))
             shm_ok = header.get("shm_ok", False)
+            t_grant = now()
             lens, blobs = [], []
             for t_put, meta, data in items:
+                if meta.get("trace") and meta.get("task_id"):
+                    # queue_wait bounds enqueue -> lease grant on THIS
+                    # broker's clock; t_put is the producer's clock (same
+                    # CLOCK_MONOTONIC timebase on one machine, aligned by
+                    # the report's offset chain across machines)
+                    obs.span(meta["task_id"], "queue_wait", t_put, t_grant,
+                             attempt=int(meta.get("redelivered", 0) or 0),
+                             topic=header["topic"], kind=header["kind"])
                 if "_shm" in meta and shm_ok:
                     # hand the descriptor through: the co-located consumer
                     # maps the segment itself and the payload never touches
@@ -442,6 +486,12 @@ class Broker:
             return {"ok": True}, b""
         if op == "ping":
             return {"ok": True}, b""
+        if op == "clock_sync":
+            # read-only clock probe: the caller brackets this reply with
+            # its own now() pair and min-RTT-midpoints the offset
+            return {"t": now()}, b""
+        if op == "stats_scrape":
+            return {"stats": self.scrape_stats()}, b""
         if op == "shutdown":
             return None
         return {"error": f"unknown op {op!r}"}, b""
@@ -480,6 +530,11 @@ def broker_main(sock, snapshot_every: float = 0.0,
                 shm_scope: Optional[str] = None) -> None:
     """Entry point of the broker process (listening socket inherited from
     the parent fork)."""
+    try:
+        addr = obs.addr_str(sock.getsockname())
+    except OSError:
+        addr = ""
+    obs.configure(role="broker", addr=addr)
     broker = Broker(shm_scope=shm_scope)
     stop = threading.Event()
     if snapshot_every and snapshot_path:
@@ -487,3 +542,5 @@ def broker_main(sock, snapshot_every: float = 0.0,
                            stop)
     frames.serve_forever(sock, broker.handle, stop)
     broker.release_segments()
+    # graceful shutdown: final cumulative metrics + buffered span tail
+    obs.flush_metrics(force=True)

@@ -21,6 +21,7 @@ import threading
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
+from repro import observability as obs
 from repro.core.transport.base import (BoundedIdSet, Channel, Envelope,
                                        Transport, dump_snapshot,
                                        load_snapshot)
@@ -52,8 +53,10 @@ class LocalChannel(Channel):
                    if deadline <= tnow]
         if not expired:
             return
+        obs.counter("expired_leases").inc(len(expired))
         for lid in expired:
             _, _, envs = self._leases.pop(lid)
+            obs.counter("redeliveries").inc(len(envs))
             for env in reversed(envs):
                 meta = dict(env.meta)
                 meta["redelivered"] = meta.get("redelivered", 0) + 1
@@ -74,6 +77,7 @@ class LocalChannel(Channel):
             # can never capture the claim without its result
             with self._t._lock:
                 if not self._t._claimed.claim(claim):
+                    obs.counter("claim_rejects").inc()
                     return False
                 with self._cond:
                     self._items.append(env)
@@ -108,6 +112,13 @@ class LocalChannel(Channel):
                         # bounded by this lease's expiry (see broker.get)
                         self._cond.notify_all()
                     self._tls.held = lid
+                    t_grant = now()
+                    for env in out:
+                        if env.meta.get("trace") and env.meta.get("task_id"):
+                            obs.span(env.meta["task_id"], "queue_wait",
+                                     env.t_put, t_grant,
+                                     attempt=int(env.meta.get(
+                                         "redelivered", 0) or 0))
                     return out
                 if cancel is not None and cancel.is_set():
                     return []
@@ -217,6 +228,12 @@ class LocalTransport(Transport):
     def claim(self, task_id: str) -> bool:
         with self._lock:
             return self._claimed.claim(task_id)
+
+    def clock_sync(self) -> float:
+        """Interface parity with ``ProcTransport.clock_sync``: everything
+        shares this process's clock, so the reference time IS ``now()``
+        (calibration against it converges on a ~zero offset)."""
+        return now()
 
     # -- snapshot/restore ---------------------------------------------------
 

@@ -50,6 +50,7 @@ import tempfile
 import threading
 from typing import List, Optional, Tuple
 
+from repro import observability as obs
 from repro.core.transport import frames, shm
 from repro.core.transport.base import Channel, Envelope, Transport
 from repro.core.transport.broker import broker_main
@@ -94,8 +95,13 @@ class ProcChannel(Channel):
         if claim is not None:
             header["claim"] = claim
         payload = env.data
+        traced = env.meta.get("trace") and env.meta.get("task_id")
+        t0 = now() if traced else 0.0
         desc = self._t.export_payload(payload) if self._local else None
         if desc is not None:
+            if traced:
+                obs.span(env.meta["task_id"], "shm_write", t0, now(),
+                         size=len(payload))
             header["shm"] = desc
             payload = b""
         # NOTE on a failed request after export: the segment is NOT
@@ -144,6 +150,8 @@ class ProcChannel(Channel):
                         # (read-only -- consumers never unlink, see shm.py)
                         meta = dict(meta)
                         desc = meta.pop("_shm")
+                        t0 = (now() if meta.get("trace")
+                              and meta.get("task_id") else 0.0)
                         try:
                             data = shm.read_segment(desc)
                         except OSError:
@@ -152,6 +160,9 @@ class ProcChannel(Channel):
                             # (destroying the segment): this copy lost the
                             # race anyway -- drop it, the claim dedups
                             continue
+                        if t0:
+                            obs.span(meta["task_id"], "shm_read", t0, now(),
+                                     size=len(data))
                         out.append(Envelope(t_put, data, meta))
                         continue
                     out.append(Envelope(t_put, blob[off:off + n], meta))
@@ -446,6 +457,14 @@ class ProcTransport(Transport):
             self.request({"op": "wake"}, retry=True)
         except (ConnectionError, OSError):
             pass                    # broker already torn down: nothing parked
+
+    def clock_sync(self) -> float:
+        """One roundtrip of the idempotent ``clock_sync`` op against the
+        connected broker: returns the broker's ``now()``.  Feed it to
+        ``observability.calibrate`` to estimate this process's clock
+        offset onto that broker's timeline."""
+        header, _ = self.request({"op": "clock_sync"}, retry=True)
+        return float(header["t"])
 
     def claim(self, task_id: str) -> bool:
         # deliberately NOT retried: a resend of a claim that was applied

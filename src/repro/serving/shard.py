@@ -42,6 +42,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
+from repro import observability as obs
 from repro.core import message as msg
 from repro.core.transport.base import Envelope, Transport
 from repro.serving.batcher import (DEFAULT_PROMPT_BUCKETS, DecodeGroup,
@@ -114,6 +115,7 @@ class _ActiveGroup:
     def __init__(self, group: DecodeGroup, state) -> None:
         self.group = group
         self.state = state
+        self.t_decode0 = now()              # decode-span origin (tracing)
 
 
 class ServeLoop:
@@ -199,6 +201,11 @@ class ServeLoop:
         max_new = min(max_new, self.spec.max_new_cap)
         req = InferenceRequest(task_id=task.task_id, tokens=tokens,
                                max_new=max_new, enqueue_t=now(), lease=lid)
+        if env.meta.get("trace"):
+            # sampled at submit; the attempt number distinguishes the
+            # sub-traces a lease-expiry redelivery produces
+            req.meta["trace"] = 1
+            req.meta["attempt"] = int(env.meta.get("redelivered", 0) or 0)
         if not tokens or len(tokens) > max(self.spec.prompt_buckets):
             self._publish_error(
                 req, f"prompt length {len(tokens)} outside buckets "
@@ -256,13 +263,19 @@ class ServeLoop:
 
     def _publish(self, req: InferenceRequest, value, *, success: bool,
                  error: Optional[str] = None) -> None:
+        t_fin = now()
         result = msg.Result(task_id=req.task_id, topic=self.spec.topic,
                             method="infer", success=success, value=value,
                             error=error, worker=self.identity)
         data = msg.serialize(result)
         meta = {"output_size": len(data), "task_id": req.task_id}
-        won = self.results.put(Envelope(now(), data, meta),
+        if req.meta.get("trace"):
+            meta["trace"] = 1               # keep the result hop sampled
+        won = self.results.put(Envelope(t_fin, data, meta),
                                claim=req.task_id)
+        if req.meta.get("trace"):
+            obs.span(req.task_id, "retire", t_fin, now(),
+                     attempt=req.meta.get("attempt", 0), claimed=bool(won))
         self.stats["published" if won else "claim_lost"] += 1
         self._release_lease(req.lease)
 
@@ -277,7 +290,12 @@ class ServeLoop:
         done = g.finished()
         if not done:
             return
+        t_fin = now()
         for req, toks in done:
+            if req.meta.get("trace"):
+                obs.span(req.task_id, "decode", active.t_decode0, t_fin,
+                         attempt=req.meta.get("attempt", 0),
+                         new_tokens=len(toks))
             self._publish(req, list(toks), success=True)
         g.retire_finished()
         target = g.compaction(active.state.padded_b)
@@ -291,6 +309,15 @@ class ServeLoop:
     def _admit(self) -> None:
         """Prefill every micro-batch the batcher deems ready."""
         for mb in self.batcher.pop_ready(now()):
+            t_admit = now()
+            obs.observe("batch_occupancy",
+                        len(mb.requests) / self.spec.max_batch)
+            for req in mb.requests:
+                obs.observe("infer_queue_delay", t_admit - req.enqueue_t)
+                if req.meta.get("trace"):
+                    obs.span(req.task_id, "infer_queue", req.enqueue_t,
+                             t_admit, attempt=req.meta.get("attempt", 0),
+                             bucket=mb.bucket)
             padded_b = batch_bucket(len(mb.requests), self.spec.max_batch)
             reserve = mb.bucket + _pow2_at_most(mb.max_new,
                                                 self.spec.max_new_cap)
@@ -302,8 +329,16 @@ class ServeLoop:
                     self._publish_error(req, f"prefill failed: {exc!r}")
                 continue
             self.stats["prefills"] += 1
+            obs.counter("prefills").inc()
+            t_prefilled = now()
+            for req in mb.requests:
+                if req.meta.get("trace"):
+                    obs.span(req.task_id, "prefill", t_admit, t_prefilled,
+                             attempt=req.meta.get("attempt", 0),
+                             rows=len(mb.requests))
             active = _ActiveGroup(DecodeGroup(mb, first, self.spec.max_batch),
                                   state)
+            active.t_decode0 = t_prefilled
             self._finish_rows(active)       # max_new == 1 rows
             if not active.group.done:
                 self.groups.append(active)
@@ -321,6 +356,7 @@ class ServeLoop:
                     self._publish_error(req, f"decode failed: {exc!r}")
                 continue
             self.stats["decode_steps"] += 1
+            obs.counter("decode_steps").inc()
             active.group.record_step(nxt)
             self._finish_rows(active)
             if not active.group.done:
@@ -340,9 +376,11 @@ class ServeLoop:
                     break
                 self._admit()
                 self._step()
+                obs.flush_metrics()         # throttled cumulative snapshot
         finally:
             hb_stop.set()
             hb.join(timeout=2)
+            obs.flush_metrics(force=True)   # final cumulative snapshot
             try:
                 self.results.ack(flush=True)    # flush piggybacked acks
             except (ConnectionError, OSError):
@@ -372,6 +410,15 @@ def inference_shard_main(address: tuple, spec: ServeSpec, *,
 
     signal.signal(signal.SIGTERM, _sigterm)
     transport = ProcTransport(address=address, lease_timeout=lease_timeout)
+    ref, offset = "", None
+    if obs.enabled():
+        try:
+            offset = obs.calibrate(transport.clock_sync)
+            ref = obs.addr_str(address)
+        except (ConnectionError, OSError, RuntimeError, KeyError,
+                TypeError, ValueError):
+            offset = None                   # telemetry only: never fatal
+    obs.configure(role="infer", ref=ref, offset=offset)
     loop = ServeLoop(transport, spec, stop=stop, identity=identity)
     try:
         loop.run()

@@ -9,6 +9,7 @@ policies can reason about overheads at plan time.
 from __future__ import annotations
 
 import time
+from collections import deque
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
@@ -50,18 +51,35 @@ class Timer:
 
 
 class RateMeter:
-    """Utilization / throughput meter over a sliding campaign window."""
+    """Utilization / throughput meter over a sliding campaign window.
 
-    def __init__(self):
+    Cumulative totals (``busy``, ``utilization``) cover the whole
+    campaign; the per-event record is bounded to the last
+    ``window_events`` entries (the fabric's sliding-window idiom, cf.
+    ``BoundedIdSet``) -- a million-task campaign keeps a million-task
+    utilization number without a million-entry list.
+    """
+
+    def __init__(self, window_events: int = 4096):
         self.busy = 0.0
+        self.count = 0
         self.start = now()
-        self.events = []  # (t, kind, payload)
+        self.events = deque(maxlen=window_events)  # (t, kind, seconds)
 
     def add_busy(self, seconds: float, kind: str = "task") -> None:
         self.busy += seconds
+        self.count += 1
         self.events.append((now() - self.start, kind, seconds))
 
     def utilization(self, capacity: float) -> float:
         """busy_time / (capacity * elapsed); capacity in worker-slots."""
         elapsed = max(now() - self.start, 1e-9)
         return self.busy / (capacity * elapsed)
+
+    def recent_rate(self) -> float:
+        """Events/second over the retained window (0.0 until two
+        events exist)."""
+        if len(self.events) < 2:
+            return 0.0
+        dt = self.events[-1][0] - self.events[0][0]
+        return (len(self.events) - 1) / max(dt, 1e-9)

@@ -1,0 +1,11 @@
+"""Fixture: a span whose name is not declared in
+``repro/observability/names.py`` -- the report merges sinks and maps
+the Fig.-5 decomposition by name, so an undeclared name doesn't error,
+it just fragments the timeline into a series nobody aggregates.
+Must trip the span-name-registry pass."""
+from repro import observability as obs
+
+
+def execute(task_id, fn):
+    with obs.span(task_id, "task_execuet"):     # typo'd, undeclared
+        return fn()

@@ -406,6 +406,7 @@ FIXTURE_EXPECT = [
     ("bad_wallclock_deadline.py", "monotonic-deadlines", 8),
     ("bad_header_pickle.py", "frame-header-hygiene", 11),
     ("bad_shm_consumer_unlink.py", "shm-segment-lifecycle", 14),
+    ("bad_span_undeclared.py", "span-name-registry", 10),
 ]
 
 
