@@ -6,10 +6,56 @@ oracle.  The reproducible claims:
      success 0.5% random vs 64%/78% steered),
   2. update-n >= no-retrain (retraining helps),
   3. the ML models improve with campaign data (MAE trend).
+
+Plus the streaming-steering claim: when tasks publish partial results
+mid-run, a Thinker that preempts losers on their *first* partial
+(broker-side ``cancel``) finishes the same candidate sweep faster than
+one that lets every task run to completion.  Both arms run the real
+synapp fabric (local queues, thread task server, stream lane, fused
+cancel claim); with keep fraction p and S slices per task the ideal
+speedup is 1/(p + (1-p)/S) -- the ``discovery_preemption_speedup`` row
+measures how much of it survives real dispatch overheads.
 """
 from __future__ import annotations
 
 from repro.apps.electrolyte import AppConfig, run_campaign
+from repro.apps.synapp import SynConfig, run_synapp
+
+# preemption-arm shape: C candidates on W workers, each S slices of DT
+# seconds; the culling Thinker keeps ~KEEP of them (pseudo-scores are
+# uniform, so cull_losers = 1 - KEEP).  Ideal speedup here:
+# 1 / (0.25 + 0.75/6) = 2.67x
+CANDIDATES = 16
+WORKERS = 4
+SLICES = 6
+SLICE_DT = 0.05
+KEEP = 0.25
+
+
+def _discovery_arm(cull: bool, seed: int = 0):
+    cfg = SynConfig(T=CANDIDATES, D=SLICES * SLICE_DT, I=1024, O=0,
+                    N=WORKERS, use_value_server=False, backend="local",
+                    seed=seed,
+                    cull_losers=(1.0 - KEEP) if cull else 0.0,
+                    cull_steps=SLICES)
+    return run_synapp(cfg)
+
+
+def preemption_rows(seed: int = 0):
+    """The streaming-steering arms: identical candidate sweep, with and
+    without first-partial preemption."""
+    base = _discovery_arm(cull=False, seed=seed)
+    pre = _discovery_arm(cull=True, seed=seed)
+    speedup = base["makespan"] / max(pre["makespan"], 1e-9)
+    ideal = 1.0 / (KEEP + (1.0 - KEEP) / SLICES)
+    return [
+        ("discovery_run_to_completion_s", base["makespan"],
+         f"C={CANDIDATES}, W={WORKERS}, S={SLICES}x{SLICE_DT}s, no cull"),
+        ("discovery_preemption_s", pre["makespan"],
+         f"culled {pre['culled']} of {CANDIDATES} on first partial"),
+        ("discovery_preemption_speedup", speedup,
+         f"run-to-completion / preemption, ideal {ideal:.2f}x"),
+    ]
 
 
 def run(num_molecules: int = 1200, qc_budget: int = 60,
@@ -36,9 +82,49 @@ def run(num_molecules: int = 1200, qc_budget: int = 60,
                  outs["update-n"]["initial_mae"]
                  - outs["update-n"]["final_mae"],
                  "positive = model improved during campaign"))
+    rows.extend(preemption_rows(seed=seed))
     return rows
 
 
-if __name__ == "__main__":
-    for name, val, extra in run():
+def run_quick(seed: int = 0):
+    """CI smoke subset: just the preemption arms (the fig4 campaigns
+    train real models and take minutes; the streaming-steering claim
+    needs only the two synapp arms, seconds each)."""
+    return preemption_rows(seed=seed)
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--quick", action="store_true",
+                   help="CI smoke: preemption arms only, no fig4 "
+                        "campaigns")
+    p.add_argument("--json", default="", metavar="PATH",
+                   help="also write rows as JSON (name -> {value, note})")
+    p.add_argument("--min-speedup", type=float, default=0.0, metavar="X",
+                   help="fail (exit 1) if discovery_preemption_speedup "
+                        "< X")
+    args = p.parse_args(argv)
+    rows = run_quick() if args.quick else run()
+    for name, val, extra in rows:
         print(f"{name},{val},{extra}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({name: {"value": val, "note": extra}
+                       for name, val, extra in rows}, f, indent=2)
+    if args.min_speedup:
+        speedup = next(v for name, v, _ in rows
+                       if name == "discovery_preemption_speedup")
+        if speedup < args.min_speedup:
+            print(f"FAIL: preemption speedup {speedup:.2f}x below the "
+                  f"{args.min_speedup:.1f}x acceptance bound")
+            return 1
+        print(f"OK: preemption speedup {speedup:.2f}x >= "
+              f"{args.min_speedup:.1f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,6 +22,13 @@ Deliberately ABSENT (their call sites must not pass ``retry=True``):
 - ``backup`` -- a resend of an applied straggler clone enqueues a
   *second* clone; harmless (claim dedup) but wasteful, and the
   straggler timer re-fires on its own if the first send truly died.
+- ``cancel`` -- fused claim: an applied-then-dropped cancel's resend
+  would answer ``won=False`` to the rightful first canceller, who
+  would then skip its own bookkeeping for a cancel that *did* land.
+- ``put_stream`` -- an observation publish; a resend could
+  double-publish the observation under the same seq.  Observations are
+  advisory (no claim, no lease), so losing one to a dropped connection
+  is cheaper than duplicating it.
 """
 
 IDEMPOTENT_OPS = {
@@ -50,6 +57,8 @@ IDEMPOTENT_OPS = {
                      "twice == clearing once",
     "vs_snapshot": "read-only serialization of one shard's contents",
     "vs_stats": "read-only counter probe",
+    "cancelled": "read-only membership probe of the bounded cancelled-id "
+                 "window; a resend cannot change state",
     # observability ops (transport/broker.py; see repro/observability)
     "clock_sync": "read-only monotonic-clock probe; the caller keeps only "
                   "the min-RTT round, so a resend merely adds a sample",

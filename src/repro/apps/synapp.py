@@ -35,7 +35,8 @@ import numpy as np
 
 from repro import observability as obs
 from repro.core import (ColmenaQueues, ProcessPoolTaskServer,
-                        ShardedValueServer, TaskServer, ValueServer)
+                        ShardedValueServer, TaskServer, ValueServer,
+                        streaming)
 from repro.core.thinker import BaseThinker, agent, result_processor
 
 
@@ -80,6 +81,14 @@ class SynConfig:
     trace_dir: str = ""          # span sink directory (default: a fresh
                                  # temp dir; feed it to
                                  # ``repro.observability.report``)
+    cull_losers: float = 0.0     # >0: streaming steering -- tasks publish
+                                 # partial results mid-run and the Thinker
+                                 # preempts (broker-side cancel) the bottom
+                                 # ``cull_losers`` fraction on their first
+                                 # partial, resubmitting into the freed slot
+    cull_steps: int = 4          # partials per task when culling: the task
+                                 # duration is spent in this many slices
+                                 # with report_intermediate between them
 
 
 def proxy_scorer_factory():
@@ -176,8 +185,9 @@ class SynThinker(BaseThinker):
             # race a checkpoint either, or the snapshot could capture
             # the scorer requests without the submission they feed
             self.queues.send_task(self._choose(idx), self.cfg.D,
-                                  self.cfg.O, method="syntask",
-                                  topic="syntask")
+                                  self.cfg.O, self.cfg.cull_steps
+                                  if self.cfg.cull_losers else 0,
+                                  method="syntask", topic="syntask")
         return True
 
     def _checkpoint(self):
@@ -202,14 +212,24 @@ class SynThinker(BaseThinker):
     def consumer(self, result):
         assert result.success, result.error
         self.results.append(result)
-        self.completed += 1
+        self._advance()
+
+    def _advance(self):
+        """Count one campaign outcome -- a delivered result, or (in the
+        culling subclass) a preemption decision -- and keep the
+        submit-per-outcome loop moving.  The count mutates under
+        ``_sub_lock``: the consumer thread and the stream-drain threads
+        both land here."""
+        with self._sub_lock:
+            self.completed += 1
+            completed = self.completed
         if (self.cfg.checkpoint_every
-                and self.completed % self.cfg.checkpoint_every == 0):
+                and completed % self.cfg.checkpoint_every == 0):
             # defer to the batch boundary: mid-batch, sibling results of
             # this drain are decoded (acked out of the broker) but not
             # yet counted -- a snapshot here would lose them on resume
             self._ckpt_due = True
-        if self.completed >= self.cfg.T:
+        if completed >= self.cfg.T:
             # done.set() suppresses the batch-boundary hook, so flush a
             # pending checkpoint here -- at T every delivered result is
             # counted, which is exactly the boundary the hook waits for
@@ -226,7 +246,54 @@ class SynThinker(BaseThinker):
             self._checkpoint()
 
 
-def syntask(payload: bytes, duration: float, out_bytes: int) -> bytes:
+class CullingSynThinker(SynThinker):
+    """Streaming steering (``cull_losers``): syntask spends its duration
+    in ``cull_steps`` slices, publishing a partial after each; this
+    Thinker reads the first partial's pseudo-score and preempts the
+    bottom ``cull_losers`` fraction via broker-side ``cancel`` -- the
+    loser stops burning its worker after one slice instead of running to
+    completion, and the freed slot is resubmitted immediately.  A cull
+    counts as a campaign outcome (the steering policy *decided* that
+    task), so T outcomes still terminate the run."""
+
+    def __init__(self, queues, cfg: SynConfig, **kw):
+        super().__init__(queues, cfg, **kw)
+        self.culled = 0
+        self._decided: set = set()
+
+    def process_intermediate(self, ob):
+        if ob.value["score"] >= self.cfg.cull_losers:
+            return                      # keeper: let it run out
+        if ob.task_id in self._decided:
+            return                      # later slices of a known loser
+        self._decided.add(ob.task_id)
+        if self.queues.cancel(ob.task_id, "syntask"):
+            # won the cancel-vs-completion race: the task will never
+            # deliver a result, so the cull itself is the outcome
+            with self._sub_lock:
+                self.culled += 1
+            self._advance()
+        # lost the race: the completion is already enqueued and the
+        # consumer counts it -- nothing to do here
+
+
+def syntask(payload: bytes, duration: float, out_bytes: int,
+            steps: int = 0) -> bytes:
+    """steps=0: the paper's opaque synthetic task (sleep D, emit O
+    bytes).  steps>0: the streaming variant -- the duration is spent in
+    that many slices with a partial published after each, carrying a
+    pseudo-score derived from the payload (deterministic, so local and
+    pool workers rank identically).  ``report_intermediate`` raises
+    ``TaskCancelled`` between slices once the Thinker culls this task."""
+    if steps:
+        score = int.from_bytes(payload[:8].ljust(8, b"\0"),
+                               "little") / 2 ** 64
+        dt = duration / steps
+        for i in range(steps):
+            if dt:
+                time.sleep(dt)
+            streaming.report_intermediate({"step": i, "score": score})
+        return b"\0" * out_bytes
     if duration:
         time.sleep(duration)
     return b"\0" * out_bytes
@@ -295,10 +362,11 @@ def _run_cluster(cfg: SynConfig, progress, resume_from: str = "",
             if resume_from:
                 progress = queues.resume(resume_from, payload=ckpt_payload)
                 cfg.T = progress.get("T", cfg.T)
-            thinker = SynThinker(queues, cfg,
-                                 submitted=progress["submitted"],
-                                 completed=progress["completed"],
-                                 scorer=scorer)
+            cls = CullingSynThinker if cfg.cull_losers else SynThinker
+            thinker = cls(queues, cfg,
+                          submitted=progress["submitted"],
+                          completed=progress["completed"],
+                          scorer=scorer)
             thinker.run(timeout=600)
             makespan = time.perf_counter() - t0
         finally:
@@ -388,8 +456,9 @@ def run_synapp(cfg: SynConfig, resume_from: str = ""):
     else:
         server = TaskServer(queues, workers_per_topic=cfg.N)
     server.register(syntask, topic="syntask")
-    thinker = SynThinker(queues, cfg, submitted=progress["submitted"],
-                         completed=progress["completed"], scorer=scorer)
+    cls = CullingSynThinker if cfg.cull_losers else SynThinker
+    thinker = cls(queues, cfg, submitted=progress["submitted"],
+                  completed=progress["completed"], scorer=scorer)
     t0 = time.perf_counter()
     try:
         with server:
@@ -438,6 +507,8 @@ def _metrics(cfg: SynConfig, thinker: SynThinker, makespan: float):
         "completed_total": thinker.completed,
         # steering: candidate inputs ranked through the scorer shard
         "scored": thinker.scored,
+        # streaming steering: tasks preempted on their first partial
+        "culled": getattr(thinker, "culled", 0),
         # cluster runs: which hosts actually executed work (from the
         # winning worker identities)
         "hosts_seen": sorted({r.worker.split("/", 1)[0]
@@ -476,6 +547,13 @@ def main(argv=None):
                    help="checkpoint file path")
     p.add_argument("--resume", default="",
                    help="resume from this checkpoint file")
+    p.add_argument("--cull-losers", type=float, default=0.0, metavar="F",
+                   help="streaming steering: tasks publish partials and "
+                        "the bottom F fraction (by first-partial score) "
+                        "is preempted mid-run, freeing its worker slot")
+    p.add_argument("--cull-steps", type=int, default=4, metavar="S",
+                   help="partials per task when culling (the duration is "
+                        "spent in S slices)")
     p.add_argument("--trace", nargs="?", const=1.0, type=float,
                    default=0.0, metavar="RATE",
                    help="distributed tracing: sample RATE of tasks "
@@ -492,11 +570,13 @@ def main(argv=None):
                     inference_shards=args.inference_shards,
                     checkpoint_every=args.checkpoint_every,
                     checkpoint_path=args.ckpt,
+                    cull_losers=args.cull_losers, cull_steps=args.cull_steps,
                     trace_sample=args.trace, trace_dir=args.trace_dir)
     res = run_synapp(cfg, resume_from=args.resume)
     hosts = (f"  hosts {','.join(res['hosts_seen'])}"
              if args.cluster else "")
     scored = f"  scored {res['scored']}" if res["scored"] else ""
+    scored += f"  culled {res['culled']}" if res["culled"] else ""
     print(f"completed {res['completed_total']}/{cfg.T} "
           f"({res['n_results']} this run)  "
           f"makespan {res['makespan']:.2f}s  "

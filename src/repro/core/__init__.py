@@ -10,10 +10,12 @@ from repro.core.campaign import (AssaySpec, CampaignRecord,  # noqa: F401
                                  resume_campaign)
 from repro.core.cluster import (ClusterLauncher, ClusterSpec,  # noqa: F401
                                 HostSpec)
-from repro.core.message import Result, Task  # noqa: F401
+from repro.core.message import Intermediate, Result, Task  # noqa: F401
 from repro.core.process_pool import ProcessPoolTaskServer  # noqa: F401
 from repro.core.queues import ColmenaQueues  # noqa: F401
 from repro.core.resources import ResourceTracker  # noqa: F401
+from repro.core.streaming import (TaskCancelled,  # noqa: F401
+                                  report_intermediate)
 from repro.core.task_server import TaskServer  # noqa: F401
 from repro.core.thinker import (BaseThinker, agent, event_responder,  # noqa: F401
                                 result_processor)

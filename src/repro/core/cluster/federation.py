@@ -180,7 +180,13 @@ class FederatedBroker:
             return self.broker.handle(header, payload)
         header = self._route_acks(header)
         op = header["op"]
-        if op in ("put", "get", "len", "renew", "backup"):
+        # cancel/put_stream/cancelled route like the data-plane ops: a
+        # topic's requests/results/stream queues AND its slice of the
+        # cancelled window all live at the topic's home broker, so the
+        # cancel claim and the completion's fused put-claim arbitrate in
+        # one place
+        if op in ("put", "get", "len", "renew", "backup",
+                  "cancel", "put_stream", "cancelled"):
             h = self.home(header["topic"])
             if h != self.host:
                 return self._relay(h, header, payload)

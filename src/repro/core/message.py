@@ -69,6 +69,20 @@ class Result:
                    if k != "execute")
 
 
+@dataclass
+class Intermediate:
+    """A mid-task observation published by a worker over the ``stream``
+    channel (the streaming-steering lane).  Rides the same single-pickle
+    envelope as tasks/results, under the publishing task's trace; the
+    Thinker's ``process_intermediate`` hook receives these and may
+    ``queues.cancel(task_id)`` losers early to re-steer the capacity."""
+    task_id: str
+    topic: str
+    seq: int                     # 0-based observation index within the task
+    value: Any                   # the partial result (small; no shm lane)
+    worker: Optional[str] = None
+
+
 def serialize(obj) -> bytes:
     return pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
 

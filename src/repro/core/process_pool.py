@@ -94,6 +94,7 @@ from typing import Callable, Dict, Optional
 
 from repro import observability as obs
 from repro.core import message as msg
+from repro.core import streaming
 from repro.core.queues import ColmenaQueues
 from repro.core.task_server import MethodSpec
 from repro.core.transport import Envelope
@@ -368,7 +369,7 @@ class ProcessPoolTaskServer:
 
     # -- worker side ----------------------------------------------------------
 
-    def _start_heartbeat(self, requests):
+    def _start_heartbeat(self, requests, on_cancelled=None):
         """Worker-side lease keepalive: one daemon thread per worker
         process renews the request-queue lease under execution at half
         the lease timeout, so tasks that legitimately outlive it are
@@ -376,9 +377,15 @@ class ProcessPoolTaskServer:
         main loop publishes the lease id under ``hb_cond``; clearing it
         (task finished) or replacing it (next task) retires the old
         renewal.  A SIGKILL stops the heartbeat with the process --
-        expiry-based redelivery is untouched for real deaths."""
+        expiry-based redelivery is untouched for real deaths.
+
+        The same cadence doubles as the preemption escalation probe:
+        each beat asks the broker whether the running task id has been
+        cancelled, and ``on_cancelled`` fires when it has.  A task that
+        never calls ``report_intermediate`` (so the cooperative fused
+        probe never runs) is still preempted within ~lease_timeout/2."""
         hb_cond = threading.Condition()
-        current = [None]
+        current = [None]                    # (lease_id, task_id) or None
         interval = max(self.queues.transport.lease_timeout / 2.0, 0.05)
 
         def loop():
@@ -386,11 +393,19 @@ class ProcessPoolTaskServer:
                 with hb_cond:
                     while current[0] is None:
                         hb_cond.wait()
-                    lid = current[0]
+                    lid, tid = current[0]
                     hb_cond.wait(interval)
-                    still_running = current[0] == lid
+                    still_running = (current[0] is not None
+                                     and current[0][0] == lid)
                 if still_running:
                     try:
+                        # probe before renew: a cancelled task's lease was
+                        # already revoked broker-side, so renewing it would
+                        # be a wasted round-trip on a dead lease
+                        if (on_cancelled is not None and tid is not None
+                                and requests.is_cancelled(tid)):
+                            on_cancelled(tid)
+                            continue
                         # renew from this thread's own connection: leases
                         # are addressed (topic, kind, id), not per-socket.
                         # False = too late (already expired): the claim on
@@ -402,9 +417,9 @@ class ProcessPoolTaskServer:
         threading.Thread(target=loop, daemon=True,
                          name="pool-heartbeat").start()
 
-        def set_current(lid):
+        def set_current(lid, tid=None):
             with hb_cond:
-                current[0] = lid
+                current[0] = None if lid is None else (lid, tid)
                 hb_cond.notify()
 
         return set_current
@@ -445,8 +460,27 @@ class ProcessPoolTaskServer:
         cache: dict = {}
         stopping = [False]
         busy = [False]
+        # preemption cells shared between the main thread (executes the
+        # task), the heartbeat thread (probes the broker) and the SIGTERM
+        # handler (runs on the main thread): one-cell lists, GIL-atomic
+        current_tid = [None]                # task id under execution
+        cancel_tid = [None]                 # heartbeat saw this id cancelled
+        in_user_fn = [False]                # main thread is inside spec.fn
+        cancel_pending = [False]            # deliver at next safe point
 
         def on_term(signum, frame):
+            if cancel_tid[0] is not None and cancel_tid[0] == current_tid[0]:
+                # preemption escalation: our own heartbeat signalled us
+                # because the broker cancelled the running task.  Raise
+                # ONLY while the main thread is inside the user function;
+                # interrupting transport code would corrupt a frame
+                # mid-send, so elsewhere we set the cooperative flag and
+                # let report_intermediate (or the post-execute check)
+                # convert it.
+                if in_user_fn[0]:
+                    raise streaming.TaskCancelled(current_tid[0])
+                cancel_pending[0] = True
+                return
             stopping[0] = True
             if not busy[0]:
                 # idle: the main loop is parked in a blocking recv that
@@ -457,8 +491,15 @@ class ProcessPoolTaskServer:
                 # lease expire into a redelivery the claim dedups.
                 self._worker_flush_and_exit()
 
+        def on_cancelled(tid):
+            # heartbeat thread -> main thread: signal handlers run on the
+            # main thread, so a self-SIGTERM is a safe cross-thread
+            # interrupt that lands exactly where on_term can judge it
+            cancel_tid[0] = tid
+            os.kill(os.getpid(), signal.SIGTERM)
+
         signal.signal(signal.SIGTERM, on_term)
-        set_hb = self._start_heartbeat(requests)
+        set_hb = self._start_heartbeat(requests, on_cancelled)
         while True:
             envs = requests.get_batch(1)
             if stopping[0]:
@@ -490,20 +531,47 @@ class ProcessPoolTaskServer:
                 continue
             busy[0] = True
             task = queues._decode_task(env)
+            current_tid[0] = task.task_id
             control.put(Envelope(now(), pickle.dumps(
                 ("started", task.task_id, identity, task.topic,
                  (now(), requests.held_lease(), meta.get("backup", False)))),
                 {}))
-            set_hb(requests.held_lease())   # heartbeat across the execution
+            # heartbeat (and cancel probe) across the execution
+            set_hb(requests.held_lease(), task.task_id)
             t_task = now()
+            cancelled = False
             try:
-                self._execute(task, identity, requests, control, cache)
+                self._execute(task, identity, requests, control, cache,
+                              in_user_fn, cancel_pending)
+            except streaming.TaskCancelled:
+                cancelled = True
             finally:
                 set_hb(None)
+                current_tid[0] = None
+                cancel_tid[0] = None
+                cancel_pending[0] = False
+                in_user_fn[0] = False
                 busy_total += now() - t_task
                 obs.gauge("worker_busy_frac").set(
                     busy_total / max(now() - t_spawn, 1e-9))
                 obs.flush_metrics()
+            if cancelled:
+                # preempted: the broker's cancel already claimed the id
+                # and revoked this lease, so there is nothing to ack --
+                # and we must NOT ack: were the interruption ever wrong
+                # (stale probe), the unacked lease expires and the task
+                # redelivers, preserving at-least-once.  Detach so the
+                # channel forgets the dead lease instead of piggybacking
+                # a bogus ack on the next frame.
+                requests.detach_lease()
+                control.put(Envelope(now(), pickle.dumps(
+                    ("done", task.task_id, identity, task.topic, None)),
+                    {}))
+                busy[0] = False
+                if stopping[0]:
+                    requests.ack(flush=True)
+                    self._worker_flush_and_exit()
+                continue
             # the task reached a terminal handoff (result published, retry
             # requeued, or duplicate swallowed by the claim): release the
             # request-queue lease.  The ack piggybacks on the next frame
@@ -518,7 +586,7 @@ class ProcessPoolTaskServer:
                 self._worker_flush_and_exit()
 
     def _execute(self, task: msg.Task, identity: str, requests, control,
-                 cache: dict):
+                 cache: dict, in_user_fn: list, cancel_pending: list):
         queues = self.queues
         spec = self._methods[task.method]
         # sampling decision made at send_task rides the envelope meta;
@@ -541,8 +609,26 @@ class ProcessPoolTaskServer:
                 # sub-trace at the next attempt number
                 obs.instant(task.task_id, "task_started", attempt=attempt,
                             worker=identity)
+            # streaming context: report_intermediate publishes on the
+            # topic's stream lane; cancel_pending is the cell the SIGTERM
+            # handler flips when the exception could not be raised in
+            # place.  in_user_fn brackets spec.fn *strictly*: the handler
+            # may only raise while the main thread is inside the user
+            # frame (anywhere else could be mid-send on the socket).
+            ctx = streaming.TaskContext(
+                task.task_id, task.topic,
+                stream=queues.stream_channel(task.topic),
+                traced=traced, worker=identity,
+                cancel_pending=cancel_pending)
+            streaming.set_context(ctx)
             t0 = now()
-            value = spec.fn(*args, **kwargs)
+            try:
+                in_user_fn[0] = True
+                value = spec.fn(*args, **kwargs)
+            finally:
+                in_user_fn[0] = False
+                streaming.clear_context()
+            ctx.check_cancelled()       # pending cancel -> unwind, no result
             runtime = now() - t0
             task.timer.record("execute", runtime)
             if traced:
@@ -553,6 +639,11 @@ class ProcessPoolTaskServer:
                 success=True, value=value, args=task.args,
                 kwargs=task.kwargs, timer=task.timer,
                 input_size=task.input_size, worker=identity)
+        except streaming.TaskCancelled:
+            # preemption is not a failure: never the retry path (that
+            # would resubmit work the Thinker explicitly culled).  The
+            # caller detaches the revoked lease and moves on.
+            raise
         except Exception as e:                         # noqa: BLE001
             task.timer.record("execute", 0.0)
             if task.retries < spec.max_retries:

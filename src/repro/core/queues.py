@@ -54,6 +54,10 @@ class TopicQueue:
     def __init__(self, transport: Transport, topic: str):
         self.requests = transport.channel(topic, "requests")
         self.results = transport.channel(topic, "results")
+        # mid-task observations (streaming steering): workers publish
+        # via the fused ``put_stream`` under the task's lease, Thinkers
+        # drain via ``get_intermediates`` / ``process_intermediate``
+        self.stream = transport.channel(topic, "stream")
 
 
 class ColmenaQueues:
@@ -481,6 +485,59 @@ class ColmenaQueues:
             # flush: the batch may take arbitrarily long to process
             self._topics[topic].results.ack(flush=True)
         return results
+
+    def cancel(self, task_id: str, topic: str = "default") -> bool:
+        """Preempt a task: the broker-side ``cancel`` op claims the id
+        (so a racing completion dedups through the same fused put-claim
+        path -- exactly one of cancel/complete wins), destroys every
+        queued copy (original, retry requeue, straggler backup clone),
+        revokes in-flight leases, and wakes parked getters so freed
+        capacity re-steers immediately.  The executing worker aborts
+        cooperatively (next ``report_intermediate``) or via its
+        heartbeat probe + SIGTERM escalation (process pool).
+
+        True: this cancel won -- no result will ever arrive for the id,
+        and it leaves the active count here.  False: a completion (or an
+        earlier cancel) already claimed it -- the result is or will be
+        delivered and counts down normally."""
+        t0 = now()
+        won = self._topics[topic].requests.cancel(task_id)
+        if won:
+            obs.observe("cancel_latency", now() - t0)
+            with self._lock:
+                self._active -= 1
+                if self._active <= 0:
+                    self._all_done.notify_all()
+        return won
+
+    def stream_channel(self, topic: str = "default"):
+        """The topic's ``stream`` channel (task servers hand it to the
+        worker-side ``streaming.TaskContext``)."""
+        return self._topics[topic].stream
+
+    def _decode_intermediate(self, env: Envelope) -> msg.Intermediate:
+        ob: msg.Intermediate = msg.deserialize(env.data)
+        if env.meta.get("trace") and env.meta.get("task_id"):
+            obs.span(env.meta["task_id"], "observation_transit", env.t_put,
+                     now(), seq=int(env.meta.get("seq", 0)))
+        return ob
+
+    def get_intermediates(self, topic: str = "default", max_n: int = 32,
+                          timeout: Optional[float] = None,
+                          cancel: Optional[threading.Event] = None
+                          ) -> List[msg.Intermediate]:
+        """Blocking batched drain of the topic's stream lane: one wakeup
+        hands back up to ``max_n`` mid-task observations (empty list =
+        cancelled/timed out).  Observations are advisory partials --
+        they are acked on decode and never claimed, so a redelivered
+        duplicate (stream leases expire like any other) is at worst seen
+        twice, never lost while the publishing task is still live."""
+        envs = self._topics[topic].stream.get_batch(max_n, timeout=timeout,
+                                                    cancel=cancel)
+        out = [self._decode_intermediate(e) for e in envs]
+        if envs:
+            self._topics[topic].stream.ack(flush=True)
+        return out
 
     def wait_until_done(self, timeout: Optional[float] = None) -> bool:
         deadline = None if timeout is None else now() + timeout

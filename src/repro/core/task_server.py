@@ -35,6 +35,7 @@ from typing import Callable, Dict, Optional
 
 from repro import observability as obs
 from repro.core import message as msg
+from repro.core import streaming
 from repro.core.queues import ColmenaQueues
 from repro.core.transport.base import BoundedIdSet as _BoundedIdSet
 from repro.core.value_server import resolve_tree
@@ -170,8 +171,21 @@ class TaskServer:
             if getattr(task, "trace", False):
                 obs.instant(task.task_id, "task_started",
                             attempt=getattr(task, "attempt", 0), worker=tid)
+            # streaming context: the user function's report_intermediate
+            # publishes on the topic's stream lane and raises
+            # TaskCancelled the moment the Thinker culls this task
+            # (cooperative-only on the thread server -- no process to
+            # signal)
+            ctx = streaming.TaskContext(
+                task.task_id, task.topic,
+                stream=self.queues.stream_channel(task.topic),
+                traced=bool(getattr(task, "trace", False)), worker=tid)
+            streaming.set_context(ctx)
             t0 = now()
-            value = spec.fn(*args, **kwargs)
+            try:
+                value = spec.fn(*args, **kwargs)
+            finally:
+                streaming.clear_context()
             runtime = now() - t0
             task.timer.record("execute", runtime)
             if getattr(task, "trace", False):
@@ -187,6 +201,15 @@ class TaskServer:
                 hist.append(runtime)
                 del hist[:-50]
                 self._straggler_cond.notify_all()
+        except streaming.TaskCancelled:
+            # preempted mid-execution: the cancel already claimed the id
+            # and revoked broker state -- publish nothing, retry nothing
+            # (routing this into the retry path would resubmit work the
+            # Thinker explicitly culled)
+            with self._lock:
+                self._inflight.pop(task.task_id, None)
+                self._straggler_cond.notify_all()
+            return
         except Exception as e:                         # noqa: BLE001
             task.timer.record("execute", 0.0)
             with self._lock:

@@ -113,6 +113,17 @@ class BaseThinker:
                                   name=f"thinker-{fn.__name__}")
             th.start()
             self._threads.append(th)
+        if (type(self).process_intermediate
+                is not BaseThinker.process_intermediate):
+            # the subclass consumes the stream lane: one drain thread per
+            # worker topic (mirrors result processors -- parked in the
+            # stream queue's Condition, woken by done via wake_all)
+            for topic in self.queues.topics():
+                th = threading.Thread(
+                    target=self._wrap_stream(topic), daemon=True,
+                    name=f"thinker-stream-{topic}")
+                th.start()
+                self._threads.append(th)
         self.done.wait(timeout)
         self.done.set()                 # timeout also terminates processors
         for th in self._threads:
@@ -155,6 +166,31 @@ class BaseThinker:
                         self.log(f"after_result_batch crashed: {e!r}")
                         self.done.set()
         return run_processor
+
+    def _wrap_stream(self, topic):
+        def run_stream():
+            while not self.done.is_set():
+                obs_batch = self.queues.get_intermediates(topic, max_n=32,
+                                                          cancel=self.done)
+                for ob in obs_batch:
+                    if self.done.is_set():
+                        break
+                    try:
+                        self.process_intermediate(ob)
+                    except Exception as e:             # noqa: BLE001
+                        self.log(f"process_intermediate crashed: {e!r}")
+                        self.done.set()
+        return run_stream
+
+    def process_intermediate(self, observation) -> None:
+        """Streaming-steering hook: called with every
+        ``message.Intermediate`` a worker publishes mid-task via
+        ``streaming.report_intermediate``.  Override it to rank partial
+        results and ``self.queues.cancel(observation.task_id, topic)``
+        losers early -- the freed capacity re-steers immediately.  The
+        default is a no-op and, when not overridden, no stream drain
+        threads are started at all (zero cost for non-streaming
+        Thinkers)."""
 
     def after_result_batch(self, topic: str) -> None:
         """Hook called after a drained result batch is fully processed.

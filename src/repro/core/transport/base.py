@@ -17,15 +17,22 @@ SNAPSHOT_VERSION = 1
 
 
 def dump_snapshot(queues: list, claims_maxlen: int, claims_order: list,
+                  cancelled_maxlen: int = 0, cancelled_order: list = (),
                   ) -> bytes:
     """Shared snapshot wire format for both backends.  ``queues`` is a
     list of ``(topic, kind, epoch, items, leases)`` with ``items`` a list
     of ``(t_put, meta, data)`` and ``leases`` a list of ``(lease_id,
     duration, items)``.  Callers pass queues sorted by (topic, kind) and
     leases sorted by id so identical state always produces identical
-    bytes (no wall-clock values are stored)."""
+    bytes (no wall-clock values are stored).  ``cancelled_*`` carries the
+    preemption window: a cancelled id must stay cancelled across
+    checkpoint/resume, or a restored stale envelope of a cancelled task
+    would re-execute work the Thinker already culled (readers use
+    ``state.get("cancelled")`` -- pre-cancel snapshots simply lack it)."""
     state = {"version": SNAPSHOT_VERSION, "queues": queues,
-             "claims": {"maxlen": claims_maxlen, "order": claims_order}}
+             "claims": {"maxlen": claims_maxlen, "order": claims_order},
+             "cancelled": {"maxlen": cancelled_maxlen,
+                           "order": list(cancelled_order)}}
     return pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL)
 
 
@@ -275,6 +282,40 @@ class Channel:
 
     def wake(self) -> None:
         """Nudge every blocked consumer (shutdown/cancel propagation)."""
+        raise NotImplementedError
+
+    def cancel(self, task_id: str) -> bool:
+        """Preempt a task by id (call on the topic's ``requests``
+        channel).  Atomically: **claims** the id (so a racing completion
+        dedups through the same fused put-claim path -- exactly one of
+        cancel/complete wins), records it in the cancelled window,
+        destroys every queued copy of the task (original, retry requeue,
+        straggler backup clone -- unlinking any shm payload segments),
+        strips it out of live leases (revoking in-flight delivery: the
+        executing worker's eventual ack/expiry no longer requeues it),
+        and wakes parked getters so freed capacity is re-steered
+        immediately.  Returns True when this cancel won the claim; False
+        when the id was already claimed (completion beat the cancel --
+        the result is or will be delivered) or already cancelled.
+        Signalling the *executing* worker is cooperative and rides on
+        top: ``put_stream``/``is_cancelled`` answer "cancelled" and the
+        worker aborts at its next observation or heartbeat."""
+        raise NotImplementedError
+
+    def put_stream(self, env: Envelope, task_id: str) -> bool:
+        """Publish a mid-task observation onto this topic's ``stream``
+        lane, fused with a cancellation probe: when ``task_id`` is
+        already cancelled the observation is dropped and True is
+        returned (the worker's cue to abort), else it is enqueued for
+        the Thinker's ``process_intermediate`` drain and False is
+        returned.  Observations ride under the task's lease -- they are
+        advisory partials, so the stream lane itself needs no claims."""
+        raise NotImplementedError
+
+    def is_cancelled(self, task_id: str) -> bool:
+        """Read-only probe of the cancelled window (idempotent; safe to
+        retry).  Pool-worker heartbeats poll this between renews so a
+        cancel reaches a worker that publishes no observations."""
         raise NotImplementedError
 
     def __len__(self) -> int:

@@ -75,6 +75,10 @@ class Broker:
         self._qlock = threading.Lock()
         self._claimed = BoundedIdSet(claim_window)
         self._claim_lock = threading.Lock()
+        # preempted ids: written under _claim_lock (cancel, restore);
+        # membership reads on hot paths are lock-free (GIL-atomic set
+        # probes -- a racing cancel is caught at the next probe)
+        self._cancelled = BoundedIdSet(claim_window)
         # the fabric's shared-memory scope token: advertised to clients
         # via the ``endpoints`` op so producers name their segments under
         # it (and teardown can sweep exactly this fabric's leftovers)
@@ -172,29 +176,41 @@ class Broker:
             if not q.items and (last_epoch is None
                                 or q.epoch != last_epoch):
                 return [], True, q.epoch, None  # epoch sync / missed wake
-            while not q.items:
-                if q.epoch != last_epoch:
-                    return [], True, q.epoch, None
-                remaining = None
-                if deadline is not None:
-                    remaining = deadline - now()
-                    if remaining <= 0:
-                        return [], False, q.epoch, None
-                # bound the park by the earliest in-flight lease deadline
-                # so this getter requeues expired leases itself
-                lease_dl = self._next_lease_deadline_locked(q)
-                if lease_dl is not None:
-                    until_lease = max(lease_dl - now(), 0.0)
-                    remaining = (until_lease if remaining is None
-                                 else min(remaining, until_lease))
-                if remaining is None:
-                    q.cond.wait()
-                else:
-                    q.cond.wait(remaining)
-                self._expire_locked(q)
-            out = []
-            while q.items and len(out) < max_n:
-                out.append(q.items.popleft())
+            out: list = []
+            while not out:
+                while not q.items:
+                    if q.epoch != last_epoch:
+                        return [], True, q.epoch, None
+                    remaining = None
+                    if deadline is not None:
+                        remaining = deadline - now()
+                        if remaining <= 0:
+                            return [], False, q.epoch, None
+                    # bound the park by the earliest in-flight lease
+                    # deadline so this getter requeues expired leases
+                    # itself
+                    lease_dl = self._next_lease_deadline_locked(q)
+                    if lease_dl is not None:
+                        until_lease = max(lease_dl - now(), 0.0)
+                        remaining = (until_lease if remaining is None
+                                     else min(remaining, until_lease))
+                    if remaining is None:
+                        q.cond.wait()
+                    else:
+                        q.cond.wait(remaining)
+                    self._expire_locked(q)
+                while q.items and len(out) < max_n:
+                    t_put, meta, data = q.items.popleft()
+                    tid = meta.get("task_id")
+                    if tid is not None and tid in self._cancelled:
+                        # cancelled work drained defensively (a retry
+                        # requeue or lease-expiry redelivery raced the
+                        # cancel's strip): destroy it.  Rare path, so
+                        # the unlink may stay under the cond
+                        if "_shm" in meta:
+                            shm.unlink_segment(meta["_shm"])
+                        continue
+                    out.append((t_put, meta, data))
             lid = q.next_lease
             q.next_lease += 1
             # `out` is owned by this handler and never mutated after the
@@ -283,6 +299,92 @@ class Broker:
     def claim(self, task_id: str) -> bool:
         with self._claim_lock:
             return self._claimed.claim(task_id)
+
+    def cancel(self, topic: str, task_id: str) -> bool:
+        """Preempt ``task_id`` on ``topic``: claim the id (a racing
+        completion's fused put-claim dedups against this -- exactly one
+        of cancel/complete wins), record it cancelled, destroy every
+        queued copy (original, retry requeue, straggler backup clone)
+        and strip it out of live leases on the requests *and* stream
+        queues, then wake parked getters so the freed capacity is
+        re-steered immediately.  The executing worker is not contacted
+        here -- it notices via the fused ``put_stream`` reply or the
+        heartbeat's ``is_cancelled`` probe and aborts cooperatively."""
+        # resolve the queues BEFORE taking the claim lock: _queue
+        # acquires _qlock, and a claim_lock -> qlock nesting would be a
+        # new lock-order edge nothing else needs
+        qs = [self._queue(topic, "requests"), self._queue(topic, "stream")]
+        dropped: list = []
+        # claim + cancelled-window write + strip are one atomic step
+        # under the claim lock (claim_lock -> q.cond, the same order as
+        # put-with-claim and snapshot): a snapshot can never image the
+        # claim without the strip
+        with self._claim_lock:
+            if not self._claimed.claim(task_id):
+                return False                # completion already won
+            self._cancelled.add(task_id)
+            for q in qs:
+                with q.cond:
+                    kept: deque = deque()
+                    for item in q.items:
+                        if item[1].get("task_id") == task_id:
+                            if "_shm" in item[1]:
+                                dropped.append(item[1]["_shm"])
+                        else:
+                            kept.append(item)
+                    q.items = kept
+                    for lid in list(q.leases):
+                        dur, dl, items = q.leases[lid]
+                        live = []
+                        for item in items:
+                            if item[1].get("task_id") == task_id:
+                                if "_shm" in item[1]:
+                                    dropped.append(item[1]["_shm"])
+                            else:
+                                live.append(item)
+                        if len(live) == len(items):
+                            continue
+                        if live:
+                            q.leases[lid] = (dur, dl, live)
+                        else:
+                            # nothing left under the lease (e.g. a
+                            # backup clone's whole delivery): drop it --
+                            # expiry would requeue nothing
+                            del q.leases[lid]
+                    # wake parked getters: an idle getter parked in an
+                    # unbounded wait re-checks its cancel Event (the
+                    # PR-7 stop-envelope hazard) and freed capacity is
+                    # re-steerable immediately
+                    q.epoch += 1
+                    q.cond.notify_all()
+        # revocation must unlink, not leak: the stripped envelopes owned
+        # their segments (outside the locks, mirroring ack)
+        for desc in dropped:
+            shm.unlink_segment(desc)
+        obs.counter("tasks_cancelled").inc()
+        return True
+
+    def put_stream(self, topic: str, t_put: float, meta: dict,
+                   data: bytes) -> bool:
+        """Mid-task observation publish fused with the cancel probe:
+        True = the task is already cancelled and the observation was
+        dropped (the worker's cue to abort); False = enqueued on the
+        stream lane.  The membership read is lock-free (GIL-atomic; a
+        cancel racing this publish is benign -- the worker aborts at its
+        next probe and the get path destroys the stale observation)."""
+        tid = meta.get("task_id")
+        if tid is not None and tid in self._cancelled:
+            obs.counter("observations_dropped").inc()
+            return True
+        q = self._queue(topic, "stream")
+        with q.cond:
+            q.items.append((t_put, meta, data))
+            q.cond.notify()
+        return False
+
+    def is_cancelled(self, task_id: str) -> bool:
+        """Read-only probe of the cancelled window (idempotent)."""
+        return task_id in self._cancelled   # GIL-atomic read
 
     def qlen(self, topic: str, kind: str) -> int:
         q = self._queue(topic, kind)
@@ -378,7 +480,9 @@ class Broker:
                 out.append((topic, kind, q.epoch, items, leases))
             order = list(self._claimed._order)
             maxlen = self._claimed.maxlen
-        return dump_snapshot(out, maxlen, order)
+            c_order = list(self._cancelled._order)
+            c_maxlen = self._cancelled.maxlen
+        return dump_snapshot(out, maxlen, order, c_maxlen, c_order)
 
     def restore(self, data: bytes, expire_leases: bool = False) -> None:
         state = load_snapshot(data)
@@ -406,6 +510,15 @@ class Broker:
             for cid in state["claims"]["order"]:
                 claimed.add(cid)
             self._claimed = claimed
+            # a cancelled id must stay cancelled across resume: restored
+            # stale envelopes of preempted tasks are destroyed on get
+            canc = state.get("cancelled")
+            if canc:
+                cancelled = BoundedIdSet(canc["maxlen"]
+                                         or self._cancelled.maxlen)
+                for cid in canc["order"]:
+                    cancelled.add(cid)
+                self._cancelled = cancelled
 
     # -- frame dispatch -------------------------------------------------------
 
@@ -477,6 +590,14 @@ class Broker:
             return {"ok": True}, b""
         if op == "claim":
             return {"claimed": self.claim(header["id"])}, b""
+        if op == "cancel":
+            return {"won": self.cancel(header["topic"], header["id"])}, b""
+        if op == "put_stream":
+            dropped = self.put_stream(header["topic"], header["t_put"],
+                                      header["meta"], payload)
+            return {"ok": True, "cancelled": dropped}, b""
+        if op == "cancelled":
+            return {"cancelled": self.is_cancelled(header["id"])}, b""
         if op == "len":
             return {"n": self.qlen(header["topic"], header["kind"])}, b""
         if op == "snapshot":

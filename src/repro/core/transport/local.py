@@ -32,8 +32,11 @@ class LocalChannel(Channel):
     """FIFO of envelopes with Condition-notified blocking consumers and
     an in-flight lease ledger for at-least-once delivery."""
 
-    def __init__(self, transport: "LocalTransport"):
+    def __init__(self, transport: "LocalTransport", topic: str = "",
+                 kind: str = ""):
         self._t = transport
+        self.topic = topic
+        self.kind = kind
         self._items: "deque[Envelope]" = deque()
         self._cond = threading.Condition()
         self.epoch = 0                        # parity with the broker queue
@@ -99,7 +102,16 @@ class LocalChannel(Channel):
                 if self._items:
                     out = []
                     while self._items and len(out) < max_n:
-                        out.append(self._items.popleft())
+                        env = self._items.popleft()
+                        tid = env.meta.get("task_id")
+                        # a cancelled id's envelope is dead work: destroy
+                        # it here (backstop for a retry-requeue or
+                        # redelivery racing the cancel's strip)
+                        if tid is not None and tid in self._t._cancelled:
+                            continue
+                        out.append(env)
+                    if not out:
+                        continue              # drained only cancelled work
                     lid = self._next_lease
                     self._next_lease += 1
                     dur = self._t.lease_timeout
@@ -193,6 +205,61 @@ class LocalChannel(Channel):
             self.epoch += 1
             self._cond.notify_all()
 
+    def cancel(self, task_id: str) -> bool:
+        # claim + cancelled-window write + queue/lease strip as one
+        # atomic step under the transport lock, channel Conditions nested
+        # inside in sorted (topic, kind) order -- the same lock order as
+        # put-with-claim and snapshot, so a snapshot can never image the
+        # claim without the strip (and the witness learns no new edges)
+        with self._t._lock:
+            if not self._t._claimed.claim(task_id):
+                return False                  # completion (or an earlier
+                                              # cancel) already won
+            self._t._cancelled.add(task_id)
+            chans = [ch for (t, k), ch in sorted(self._t._channels.items())
+                     if t == self.topic and k in ("requests", "stream")]
+            for ch in chans:
+                with ch._cond:
+                    ch._items = deque(
+                        e for e in ch._items
+                        if e.meta.get("task_id") != task_id)
+                    for lid in list(ch._leases):
+                        dur, dl, envs = ch._leases[lid]
+                        live = [e for e in envs
+                                if e.meta.get("task_id") != task_id]
+                        if len(live) == len(envs):
+                            continue
+                        if live:
+                            ch._leases[lid] = (dur, dl, live)
+                        else:
+                            # nothing left under the lease (e.g. a
+                            # straggler backup clone's whole delivery):
+                            # drop it -- expiry would requeue nothing
+                            del ch._leases[lid]
+                    # wake parked getters: capacity freed by the strip is
+                    # re-steerable immediately, and an idle getter parked
+                    # in an unbounded wait re-checks its cancel Event
+                    # (the PR-7 stop-envelope hazard)
+                    ch.epoch += 1
+                    ch._cond.notify_all()
+        obs.counter("tasks_cancelled").inc()
+        return True
+
+    def put_stream(self, env: Envelope, task_id: str) -> bool:
+        # membership read without the transport lock: GIL-atomic, and a
+        # cancel racing this publish is benign -- the worker aborts at
+        # its next probe and the get path destroys the stale observation
+        if task_id in self._t._cancelled:
+            obs.counter("observations_dropped").inc()
+            return True
+        with self._cond:
+            self._items.append(env)
+            self._cond.notify()
+        return False
+
+    def is_cancelled(self, task_id: str) -> bool:
+        return task_id in self._t._cancelled  # GIL-atomic read
+
     def __len__(self) -> int:
         with self._cond:
             return len(self._items)
@@ -210,13 +277,16 @@ class LocalTransport(Transport):
         self._channels: Dict[Tuple[str, str], LocalChannel] = {}
         self._lock = threading.Lock()
         self._claimed = BoundedIdSet(claim_window)
+        # preempted ids: written under self._lock (cancel), read lock-free
+        self._cancelled = BoundedIdSet(claim_window)
         self.lease_timeout = lease_timeout
 
     def channel(self, topic: str, kind: str) -> LocalChannel:
         with self._lock:
             ch = self._channels.get((topic, kind))
             if ch is None:
-                ch = self._channels[(topic, kind)] = LocalChannel(self)
+                ch = self._channels[(topic, kind)] = LocalChannel(
+                    self, topic, kind)
             return ch
 
     def wake_all(self) -> None:
@@ -257,7 +327,9 @@ class LocalTransport(Transport):
                 queues.append((topic, kind, ch.epoch, items, leases))
             order = list(self._claimed._order)
             maxlen = self._claimed.maxlen
-        return dump_snapshot(queues, maxlen, order)
+            c_order = list(self._cancelled._order)
+            c_maxlen = self._cancelled.maxlen
+        return dump_snapshot(queues, maxlen, order, c_maxlen, c_order)
 
     def restore(self, data: bytes, expire_leases: bool = False) -> None:
         state = load_snapshot(data)
@@ -283,6 +355,15 @@ class LocalTransport(Transport):
             for cid in state["claims"]["order"]:
                 claimed.add(cid)
             self._claimed = claimed
+            # a cancelled id must stay cancelled across resume: restored
+            # stale envelopes of preempted tasks are destroyed on get
+            canc = state.get("cancelled")
+            if canc:
+                cancelled = BoundedIdSet(canc["maxlen"]
+                                         or self._cancelled.maxlen)
+                for cid in canc["order"]:
+                    cancelled.add(cid)
+                self._cancelled = cancelled
 
     def close(self) -> None:
         self.wake_all()

@@ -229,6 +229,35 @@ class ProcChannel(Channel):
     def wake(self) -> None:
         self._t.wake_all()
 
+    def cancel(self, task_id: str) -> bool:
+        """Broker-side preemption (see ``Broker.cancel``).  Deliberately
+        not retried: a resend of a cancel that was applied before its
+        connection died would answer won=False to the rightful first
+        canceller, who would then wrongly expect a result envelope."""
+        header, _ = self._t.request(
+            {"op": "cancel", "topic": self.topic, "id": task_id},
+            client=self._dc())
+        return header["won"]
+
+    def put_stream(self, env: Envelope, task_id: str) -> bool:
+        """Observation publish fused with the cancel probe (True = task
+        cancelled, observation dropped).  Observations are small and
+        advisory, so there is no shm lane here; deliberately not retried
+        (a resend could double-publish an observation -- a missed one is
+        harmless, the next publish carries fresher state anyway)."""
+        header, _ = self._t.request(
+            {"op": "put_stream", "topic": self.topic, "t_put": env.t_put,
+             "meta": env.meta}, env.data, client=self._dc())
+        return header.get("cancelled", False)
+
+    def is_cancelled(self, task_id: str) -> bool:
+        """Read-only probe of the cancelled window (idempotent, so the
+        heartbeat's probe survives a reconnect)."""
+        header, _ = self._t.request(
+            {"op": "cancelled", "topic": self.topic, "id": task_id},
+            retry=True, client=self._dc())
+        return header["cancelled"]
+
     def __len__(self) -> int:
         header, _ = self._t.request(
             {"op": "len", "topic": self.topic, "kind": self.kind},

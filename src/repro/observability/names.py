@@ -38,6 +38,10 @@ SPAN_NAMES = {
     "prefill": "shard: the admitted group's prefill call",
     "decode": "shard: first decode step to the row's finish",
     "retire": "shard: row finish to result publish",
+    # -- streaming steering (per-observation, under the task's trace) ----
+    "report_intermediate": "worker: observation serialize + stream "
+                           "publish (one span per observation)",
+    "observation_transit": "Thinker: observation envelope t_put to decode",
 }
 
 # metric name -> one-line description (role, kind)
@@ -59,6 +63,14 @@ METRIC_NAMES = {
     "decode_steps": "shard counter: decode steps across all groups",
     "batch_occupancy": "shard histogram: admitted rows / max_batch",
     "infer_queue_delay": "shard histogram: request enqueue-to-admission (s)",
+    # -- streaming steering / preemption ---------------------------------
+    "tasks_cancelled": "broker counter: cancel ops that won the claim "
+                       "(lease revoked, queued copies destroyed)",
+    "cancel_latency": "Thinker histogram: cancel() call to broker "
+                      "revocation acknowledged (s)",
+    "observations": "worker counter: intermediate observations published",
+    "observations_dropped": "worker counter: observations dropped because "
+                            "the task was already cancelled",
 }
 
 __all__ = ["SPAN_NAMES", "METRIC_NAMES"]

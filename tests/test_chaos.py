@@ -493,6 +493,219 @@ def test_campaign_kill9_resume_exactly_once(tmp_path):
         q2.shutdown()
 
 
+# ---------------------------------------------------------------------------
+# chaos: task preemption (broker-side cancel) racing completion, expiry,
+# straggler backups, SIGKILL and checkpoints
+# ---------------------------------------------------------------------------
+
+def test_cancel_vs_completion_exactly_one_outcome(make_transport_fixture):
+    """The cancel op claims the task id through the same window the
+    completion's fused put-claim uses, so whichever lands second loses --
+    never two outcomes, never zero."""
+    t = make_transport_fixture()
+    reqs = t.channel("t", "requests")
+    results = t.channel("t", "results")
+    # order 1: cancel first -- the late completion is swallowed
+    reqs.put(Envelope(now(), b"task", {"task_id": "a"}))
+    assert reqs.cancel("a") is True
+    assert reqs.cancel("a") is False        # second canceller loses too
+    assert results.put(Envelope(now(), b"late", {}), claim="a") is False
+    assert len(results) == 0
+    assert len(reqs) == 0                   # queued copy destroyed
+    # order 2: completion first -- the late cancel reports won=False
+    reqs.put(Envelope(now(), b"task", {"task_id": "b"}))
+    assert results.put(Envelope(now(), b"done", {}), claim="b") is True
+    assert reqs.cancel("b") is False
+    assert len(results) == 1
+    assert results.get(timeout=1).data == b"done"
+    results.ack(flush=True)
+
+
+def test_cancel_wakes_parked_getter(make_transport_fixture):
+    """The PR-7 stop-envelope hazard, cancel edition: a getter parked in
+    an idle get_batch re-checks its cancel Event only when something
+    nudges the wait.  Setting the Event while the getter is parked does
+    nothing by itself -- the broker-side cancel's epoch bump must wake
+    it, or it sleeps out the full timeout."""
+    t = make_transport_fixture()
+    ch = t.channel("t", "requests")
+    stop = threading.Event()
+    out = []
+    th = threading.Thread(
+        target=lambda: out.append(ch.get_batch(1, timeout=8.0,
+                                               cancel=stop)))
+    t0 = time.monotonic()
+    th.start()
+    time.sleep(0.3)                         # getter is parked by now
+    stop.set()                              # nothing re-checks it yet...
+    assert ch.cancel("a") is True           # ...until the cancel's wake
+    th.join(timeout=4)
+    assert not th.is_alive(), "parked getter never woke on cancel"
+    assert time.monotonic() - t0 < 6.0      # woke early, not at timeout
+    assert out == [[]]
+
+
+def test_cancelled_stays_cancelled_across_snapshot_restore(
+        make_transport_fixture):
+    """The cancelled-id window rides the snapshot: a resumed fabric
+    still refuses the task's completion, still answers is_cancelled,
+    and resnaps byte-identically."""
+    t = make_transport_fixture()
+    ch = t.channel("t", "requests")
+    ch.put(Envelope(now(), b"x", {"task_id": "a"}))
+    assert ch.cancel("a") is True
+    snap = t.snapshot()
+    t2 = make_transport_fixture()
+    t2.restore(snap)
+    # byte-identical resnap: the cancelled window serializes canonically
+    # (checked before touching t2 -- instantiating a channel would add
+    # an empty queue entry the original image does not have)
+    assert t2.snapshot() == snap
+    ch2 = t2.channel("t", "requests")
+    assert ch2.is_cancelled("a") is True
+    assert len(ch2) == 0                    # stripped copy stays stripped
+    # a straggler's completion surfacing after the resume still loses
+    assert t2.channel("t", "results").put(
+        Envelope(now(), b"ghost", {}), claim="a") is False
+
+
+def test_cancel_revokes_leased_original_and_backup_clone(
+        make_transport_fixture):
+    """A straggler race in flight when the cancel lands: the original is
+    under lease, its backup clone is queued.  Cancel destroys the queued
+    clone AND revokes the lease, so nothing ever redelivers."""
+    t = make_transport_fixture(lease_timeout=0.4)
+    ch = t.channel("t", "requests")
+    ch.put(Envelope(now(), b"orig", {"task_id": "a"}))
+    lease = []
+
+    def take():
+        got = ch.get_batch(1, timeout=2)
+        assert len(got) == 1
+        lease.append(ch.held_lease())       # thread-local on proc
+
+    th = threading.Thread(target=take)
+    th.start()
+    th.join()                               # "slow worker": lease unacked
+    assert ch.backup(lease[0], "a", {"exclude_worker": "w0"}) is True
+    assert len(ch) == 1                     # clone queued for placement
+    assert ch.cancel("a") is True
+    assert len(ch) == 0                     # clone destroyed
+    # the revoked original lease must NOT expire into a redelivery
+    assert ch.get(timeout=1.0) is None
+
+
+def test_cancel_during_lease_expiry_redelivery(make_transport_fixture):
+    """Cancel landing inside the expiry->requeue window: wherever the
+    envelope currently lives (still leased or already requeued), the
+    cancel destroys it and nothing redelivers afterwards."""
+    t = make_transport_fixture(lease_timeout=0.3)
+    ch = t.channel("t", "requests")
+    ch.put(Envelope(now(), b"x", {"task_id": "a"}))
+    got = _get_in_dead_thread(ch)           # lease will lapse unacked
+    assert len(got) == 1
+    time.sleep(0.45)                        # expiry deadline has passed
+    assert ch.cancel("a") is True
+    assert ch.get(timeout=0.8) is None      # no ghost redelivery
+    assert ch.is_cancelled("a") is True
+
+
+def test_cancel_with_shm_payload_unlinks_segments():
+    """A queued envelope whose payload rides the shared-memory lane is
+    cancelled: the broker must unlink the segment it owns -- a revoked
+    task that leaks its payload segment would exhaust /dev/shm over a
+    long campaign."""
+    from repro.core.transport import shm
+    if shm.shm_dir() is None:
+        pytest.skip("no /dev/shm tmpfs")
+    t = make_transport("proc")
+    try:
+        scope = t._owned_scope
+        assert scope is not None
+        ch = t.channel("t", "requests")
+        ch.put(Envelope(now(), os.urandom(512 * 1024), {"task_id": "a"}))
+        assert shm.live_segments(scope), "payload did not ride shm"
+        assert ch.cancel("a") is True
+        deadline = time.time() + 5
+        while shm.live_segments(scope) and time.time() < deadline:
+            time.sleep(0.05)
+        assert shm.live_segments(scope) == []
+    finally:
+        t.close()
+
+
+@pytest.mark.slow
+def test_cancel_then_sigkill_worker_no_ghost_completion():
+    """SIGKILL the worker in the middle of its own cancellation: the
+    cancel already claimed the id and revoked the lease, so neither the
+    dying worker nor expiry-redelivery may ever produce a result -- and
+    the pool keeps serving fresh work afterwards."""
+    queues = ColmenaQueues(["t"], backend="proc", lease_timeout=1.0)
+    pool = ProcessPoolTaskServer(queues, workers_per_topic=2)
+
+    def task(x, secs):
+        time.sleep(secs)
+        return (os.getpid(), x)
+
+    pool.register(task, name="t")
+    try:
+        with pool:
+            tid = queues.send_task(1, 30.0, method="t", topic="t")
+            deadline = time.time() + 10
+            while not pool.task_history.get(tid) and time.time() < deadline:
+                time.sleep(0.01)
+            history = pool.task_history.get(tid)
+            assert history, "task never started"
+            assert queues.cancel(tid, "t") is True
+            os.kill(_pid_of(history[0]), signal.SIGKILL)  # mid-cancel
+            # zero ghosts: no completion from the victim, none via
+            # lease-expiry redelivery (timeout spans 2x lease_timeout)
+            assert queues.get_result("t", timeout=2.5) is None
+            # capacity intact: a fresh task on the surviving worker(s)
+            queues.send_task(2, 0.05, method="t", topic="t")
+            r = queues.get_result("t", timeout=30)
+            assert r is not None and r.success
+            assert r.value[1] == 2
+    finally:
+        queues.shutdown()
+
+
+@pytest.mark.slow
+def test_cancelled_stays_cancelled_across_checkpoint_resume(tmp_path):
+    """Full-fabric version of the snapshot test: cancel a queued task,
+    checkpoint, kill the broker, resume into a fresh fabric -- the
+    cancelled task must not run, the live one must complete."""
+    path = str(tmp_path / "cancel.ckpt")
+    q1 = ColmenaQueues(["t"], backend="proc", lease_timeout=1.0)
+    try:
+        cancelled_tid = q1.send_task(1, method="t", topic="t")
+        live_tid = q1.send_task(2, method="t", topic="t")
+        assert q1.cancel(cancelled_tid, "t") is True
+        q1.checkpoint(path, extra={})
+    finally:
+        q1.shutdown()
+
+    q2 = ColmenaQueues(["t"], backend="proc", lease_timeout=1.0)
+    pool = ProcessPoolTaskServer(q2, workers_per_topic=2)
+
+    def t_fn(x):
+        return x * 10
+
+    pool.register(t_fn, name="t")
+    try:
+        q2.resume(path)
+        assert q2.active_count == 1         # the cancel already counted
+        with pool:
+            r = q2.get_result("t", timeout=30)
+            assert r is not None and r.success
+            assert r.task_id == live_tid and r.value == 20
+            # the cancelled task never runs, never completes
+            assert q2.get_result("t", timeout=1.5) is None
+            assert q2.active_count == 0
+    finally:
+        q2.shutdown()
+
+
 @pytest.mark.slow
 def test_synapp_checkpoint_then_resume_with_value_server(tmp_path):
     """The lifted restriction, single-broker: the Value Server stays
